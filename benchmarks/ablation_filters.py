@@ -1,0 +1,34 @@
+"""§5.1-5.2 ablation: seed pruning + topological filters on/off."""
+from __future__ import annotations
+
+from .common import Timer, emit, get_graph, quick_mode
+
+
+def run(dataset: str = "twitter-like", n_queries: int | None = None,
+        k: int = 2):
+    from repro.core.ferrari import build_index
+    from repro.core.query import QueryEngine
+    from repro.core.workload import positive_queries, random_queries
+    n_queries = n_queries or (5_000 if quick_mode() else 50_000)
+    g = get_graph(dataset)
+    ix = build_index(g, k=k, variant="G")
+    results = {}
+    for kind, (qs, qt) in (("random", random_queries(g, n_queries, 31)),
+                           ("positive", positive_queries(g, n_queries, 32))):
+        for seeds in (True, False):
+            for filters in (True, False):
+                eng = QueryEngine(ix, use_seeds=seeds, use_filters=filters)
+                with Timer() as t:
+                    eng.batch(qs, qt)
+                tag = f"seeds={int(seeds)},filters={int(filters)}"
+                emit(f"ablate/{dataset}/{kind}/{tag}",
+                     t.seconds / n_queries * 1e6,
+                     f"expand={eng.stats.answered_expand};"
+                     f"nodes={eng.stats.nodes_expanded}")
+                results[(kind, seeds, filters)] = (
+                    t.seconds, eng.stats.nodes_expanded)
+    return results
+
+
+if __name__ == "__main__":
+    run()

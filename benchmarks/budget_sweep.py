@@ -1,0 +1,40 @@
+"""Paper Tables 5-8: varying the size constraint k (and GRAIL's d)."""
+from __future__ import annotations
+
+from .common import Timer, emit, get_graph, quick_mode
+
+
+def run(datasets=("pubmed-like", "citpatents-like", "webuk-like"),
+        ks=(1, 2, 3, 5), n_queries: int | None = None):
+    from repro.core.ferrari import build_index
+    from repro.core.query_jax import DeviceQueryEngine
+    from repro.core.workload import positive_queries, random_queries
+    n_queries = n_queries or (10_000 if quick_mode() else 100_000)
+    results = {}
+    for name in datasets:
+        g = get_graph(name)
+        qs, qt = random_queries(g, n_queries, seed=23)
+        ps, pt = positive_queries(g, n_queries, seed=24)
+        for variant in ("L", "G"):
+            for k in ks:
+                with Timer() as tb:
+                    ix = build_index(g, k=k, variant=variant)
+                dev = DeviceQueryEngine(ix, n_dense_max=0)
+                dev.answer(qs[:256], qt[:256])
+                with Timer() as tr:
+                    dev.answer(qs, qt)
+                with Timer() as tp:
+                    dev.answer(ps, pt)
+                key = f"{name}/ferrari-{variant}/k={k}"
+                results[key] = {"build": tb.seconds, "random": tr.seconds,
+                                "positive": tp.seconds,
+                                "intervals": ix.n_intervals(),
+                                "bytes": ix.byte_size()}
+                emit(f"sweep/{key}", tr.seconds / n_queries * 1e6,
+                     f"build_s={tb.seconds:.2f};kb={ix.byte_size() / 1024:.0f};"
+                     f"pos_us={tp.seconds / n_queries * 1e6:.2f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Shared benchmark infrastructure.
+
+The paper's datasets (ArXiV..Web-UK) are not shipped in this container, so
+each gets a structurally analogous SYNTHETIC stand-in (same density regime,
+scaled to 1-core CPU budgets; scale factors recorded in EXPERIMENTS.md).
+All benchmarks print ``name,us_per_call,derived`` CSV rows via `emit`.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict
+
+import numpy as np
+
+from repro.graphs.csr import CSR
+from repro.graphs.generators import (layered_dag, random_dag,
+                                     scale_free_digraph)
+
+# dataset-name -> (generator, description) — structural analogues
+BENCH_GRAPHS: Dict[str, Callable[[], CSR]] = {
+    # small/dense (ArXiV: 6k nodes, 66.7k edges)
+    "arxiv-like": lambda: layered_dag(6_000, 60, 11.1, seed=1),
+    # small/dense (GO: 6.8k, 13.4k)
+    "go-like": lambda: layered_dag(6_793, 16, 1.97, seed=2),
+    # small/dense (Pubmed: 9k, 40k)
+    "pubmed-like": lambda: layered_dag(9_000, 45, 4.45, seed=3),
+    # small/sparse (Human: 38.8k, 39.8k)
+    "human-like": lambda: random_dag(38_811, 1.03, seed=4),
+    # large sparse (CiteSeer: 693.9k, 312.3k — scaled 10x)
+    "citeseer-like": lambda: random_dag(69_394, 0.45, seed=5),
+    # large dense (Cit-Patents: 3.77M, 16.5M — scaled 50x)
+    "citpatents-like": lambda: layered_dag(75_495, 200, 4.38, seed=6),
+    # web-scale with SCCs (Twitter condensed: 18.1M/18.4M — scaled 200x)
+    "twitter-like": lambda: scale_free_digraph(90_605, 1.01, seed=7,
+                                               back_p=0.3),
+    # web graph (Web-UK condensed: 22.8M/38.2M — scaled 200x)
+    "webuk-like": lambda: scale_free_digraph(113_768, 1.68, seed=8,
+                                             back_p=0.25),
+}
+
+SMALL = ("arxiv-like", "go-like", "pubmed-like", "human-like")
+LARGE = ("citeseer-like", "citpatents-like")
+WEB = ("twitter-like", "webuk-like")
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+@dataclass
+class Timer:
+    seconds: float = 0.0
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self._t0
+
+
+_GRAPH_CACHE: dict = {}
+
+
+def get_graph(name: str) -> CSR:
+    if name not in _GRAPH_CACHE:
+        _GRAPH_CACHE[name] = BENCH_GRAPHS[name]()
+    return _GRAPH_CACHE[name]
+
+
+def quick_mode() -> bool:
+    return "--full" not in sys.argv

@@ -1,0 +1,40 @@
+"""Paper Table 3a / 6b: index construction time per method per dataset."""
+from __future__ import annotations
+
+from .common import BENCH_GRAPHS, SMALL, LARGE, WEB, Timer, emit, get_graph, quick_mode
+
+
+def run(datasets=None, k: int = 2, d_grail: int = 2):
+    from repro.core.ferrari import build_index, build_interval_baseline
+    from repro.core.grail import build_grail
+    datasets = datasets or (SMALL + LARGE + WEB)
+    results = {}
+    for name in datasets:
+        g = get_graph(name)
+        row = {}
+        with Timer() as t:
+            ix_l = build_index(g, k=k, variant="L")
+        row["ferrari-L"] = t.seconds
+        emit(f"construct/{name}/ferrari-L", t.seconds * 1e6,
+             f"n={g.n};m={g.m};intervals={ix_l.n_intervals()}")
+        with Timer() as t:
+            ix_g = build_index(g, k=k, variant="G")
+        row["ferrari-G"] = t.seconds
+        emit(f"construct/{name}/ferrari-G", t.seconds * 1e6,
+             f"intervals={ix_g.n_intervals()};recov={ix_g.stats.heap_recover_count}")
+        with Timer() as t:
+            gx = build_grail(g, d=d_grail)
+        row["grail"] = t.seconds
+        emit(f"construct/{name}/grail", t.seconds * 1e6, f"d={d_grail}")
+        if name not in WEB or not quick_mode():
+            with Timer() as t:
+                ix_f = build_interval_baseline(g)
+            row["interval"] = t.seconds
+            emit(f"construct/{name}/interval", t.seconds * 1e6,
+                 f"intervals={ix_f.n_intervals()}")
+        results[name] = row
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Paper Table 3b / 6a: index size (bytes) per method per dataset."""
+from __future__ import annotations
+
+from .common import LARGE, SMALL, WEB, emit, get_graph, quick_mode
+
+
+def run(datasets=None, k: int = 2, d_grail: int = 2):
+    from repro.core.ferrari import build_index, build_interval_baseline
+    from repro.core.grail import build_grail
+    datasets = datasets or (SMALL + LARGE + WEB)
+    results = {}
+    for name in datasets:
+        g = get_graph(name)
+        row = {}
+        for variant in ("L", "G"):
+            ix = build_index(g, k=k, variant=variant)
+            row[f"ferrari-{variant}"] = ix.byte_size()
+            emit(f"size/{name}/ferrari-{variant}", 0.0,
+                 f"kb={ix.byte_size() / 1024:.1f};intervals={ix.n_intervals()}")
+        gx = build_grail(g, d=d_grail)
+        row["grail"] = gx.byte_size()
+        emit(f"size/{name}/grail", 0.0, f"kb={gx.byte_size() / 1024:.1f}")
+        if name not in WEB or not quick_mode():
+            ix = build_interval_baseline(g)
+            row["interval"] = ix.byte_size()
+            emit(f"size/{name}/interval", 0.0,
+                 f"kb={ix.byte_size() / 1024:.1f}")
+        results[name] = row
+    return results
+
+
+if __name__ == "__main__":
+    run()

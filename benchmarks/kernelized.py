@@ -1,0 +1,112 @@
+"""Kernelized (TPU-deploy) memory-term estimate — §Perf supplement.
+
+The dry-run's costed program uses the portable jnp attention (pallas_call
+cannot lower on the CPU backend), so its memory term includes S²-class
+score tensors crossing CPU fusion boundaries. The deployable TPU program
+runs kernels/flash_attention.py, which keeps the whole qkᵀ→softmax→·v chain
+in VMEM (O(S·hd) HBM traffic). This tool computes, per LM cell:
+
+    kernelized_bytes = cost_bytes
+                     - Σ bytes of ENTRY-op tensors with an (S, S)-shaped
+                       trailing pair (scores/probs/bias and their grads —
+                       exactly the tensors the kernel never materializes)
+                     + analytic flash HBM traffic
+                       (L · passes · (3 reads + 1 write) · B·S·H·hd · 2B;
+                        passes = 1 prefill / 3 train: fwd + flash-bwd
+                        recompute + dq/dk/dv)
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.kernelized --arch X --shape Y
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts"
+HBM_BW = 819e9
+PEAK = 197e12
+
+
+def s2_boundary_bytes(hlo: str, seq_len: int) -> int:
+    """Bytes of entry-computation tensors whose trailing dims pair to
+    (~S, ~S) — the score-class tensors a flash kernel never writes."""
+    from repro.launch.hloprof import _nbytes, _dims, parse_hlo
+
+    ops = list(parse_hlo(hlo))
+    symtab = {name: shape for name, _, shape, _, _ in ops}
+
+    def is_s2(shape_str: str) -> bool:
+        for _, dims in _dims(shape_str):
+            if len(dims) >= 2:
+                a, b = dims[-2], dims[-1]
+                if (seq_len // 2 <= a <= seq_len + 512
+                        and seq_len // 8 <= b <= seq_len + 512
+                        and a * b >= seq_len * seq_len // 8):
+                    return True
+        return False
+
+    total = 0
+    for name, kind, shape_str, line, in_entry in ops:
+        if not in_entry or kind in ("parameter", "constant"):
+            continue
+        if is_s2(shape_str):
+            total += _nbytes(shape_str)
+        inner = line.split("(", 1)[1] if "(" in line else ""
+        for a in inner.split(")", 1)[0].split(","):
+            a = a.strip().lstrip("%")
+            if a in symtab and is_s2(symtab[a]):
+                total += _nbytes(symtab[a])
+    return total
+
+
+def flash_hbm_bytes(cfg, shape, n_chips: int) -> int:
+    """Analytic per-chip HBM traffic of the flash kernel across layers."""
+    passes = 3 if shape.kind == "train" else 1
+    tensors = 4                                # q, k, v reads + o write
+    per_layer = shape.batch * shape.seq_len * cfg.n_heads * cfg.hd * 2
+    return cfg.n_layers * passes * tensors * per_layer // n_chips
+
+
+def run_cell(arch: str, shape_name: str, save_hlo: bool = True):
+    from repro.configs.base import shapes_for_family
+    from repro.configs.registry import get_config
+    from repro.launch.hloprof import profile_cell
+
+    cfg = get_config(arch)
+    shape = shapes_for_family(cfg.family)[shape_name]
+    prof, mf, hlo = profile_cell(arch, shape_name, "single", analysis=True)
+    raw = prof["cost_analysis_bytes"]
+    s2 = s2_boundary_bytes(hlo, shape.seq_len)
+    flash = flash_hbm_bytes(cfg, shape, 256)
+    kern = raw - s2 + flash
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "raw_bytes": raw, "s2_bytes": s2, "flash_bytes": flash,
+        "kernelized_bytes": kern,
+        "memory_raw_s": raw / HBM_BW,
+        "memory_kernelized_s": kern / HBM_BW,
+        "model_flops_chip": mf,
+        "roofline_raw": (mf / PEAK) / (raw / HBM_BW) if mf else None,
+        "roofline_kernelized": (mf / PEAK) / (kern / HBM_BW) if mf else None,
+    }
+    out = ART / "kernelized"
+    out.mkdir(parents=True, exist_ok=True)
+    (out / f"{arch}__{shape_name}.json").write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    args = ap.parse_args()
+    rec = run_cell(args.arch, args.shape)
+    for k, v in rec.items():
+        print(f"{k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Paper Tables 3c/3d (4c/4d): query processing time, random + positive
+workloads. Two engines per index: the paper-faithful host engine (guided
+DFS, comparable to the C++ numbers modulo Python constant factors) and the
+batched device engine (our production path — the number that matters)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import LARGE, SMALL, WEB, Timer, emit, get_graph, quick_mode
+
+
+def _run_workload(name, g, kind, n_queries, k, d_grail):
+    from repro.core.ferrari import build_index
+    from repro.core.grail import GrailQueryEngine, build_grail
+    from repro.core.query import QueryEngine
+    from repro.core.query_jax import DeviceQueryEngine
+    from repro.core.workload import positive_queries, random_queries
+    qs, qt = (random_queries if kind == "random"
+              else positive_queries)(g, n_queries, seed=17)
+    out = {}
+    for variant in ("L", "G"):
+        ix = build_index(g, k=k, variant=variant)
+        host = QueryEngine(ix)
+        with Timer() as t:
+            r_host = host.batch(qs, qt)
+        out[f"ferrari-{variant}/host"] = t.seconds
+        emit(f"query-{kind}/{name}/ferrari-{variant}-host",
+             t.seconds / n_queries * 1e6,
+             f"expand={host.stats.answered_expand}")
+        # device engine: phase-2 via host fallback (the dense-BFS phase-2 is
+        # a TPU path; emulating it on 1 CPU core would benchmark the
+        # emulator). Correctness of dense phase-2 is covered by tests.
+        dev = DeviceQueryEngine(ix, n_dense_max=0)
+        dev.answer(qs[:256], qt[:256])          # jit warmup
+        with Timer() as t:
+            r_dev = dev.answer(qs, qt)
+        out[f"ferrari-{variant}/device"] = t.seconds
+        emit(f"query-{kind}/{name}/ferrari-{variant}-device",
+             t.seconds / n_queries * 1e6,
+             f"ns_per_q={t.seconds / n_queries * 1e9:.0f};"
+             f"p2={dev.stats.phase2_queries}")
+        assert np.array_equal(r_host, r_dev), "engines disagree!"
+        # phase-1-only classification throughput (the TPU serving hot path)
+        import jax
+        cls = jax.jit(lambda a, b: dev.classify(a, b)[0])
+        cls(qs[:256], qt[:256])
+        with Timer() as t:
+            cls(qs, qt)[-1].block_until_ready()
+        emit(f"query-{kind}/{name}/ferrari-{variant}-classify",
+             t.seconds / n_queries * 1e6,
+             f"ns_per_q={t.seconds / n_queries * 1e9:.0f}")
+    gx = build_grail(g, d=d_grail)
+    geng = GrailQueryEngine(gx)
+    with Timer() as t:
+        geng.batch(qs, qt)
+    out["grail/host"] = t.seconds
+    emit(f"query-{kind}/{name}/grail-host", t.seconds / n_queries * 1e6,
+         f"expand={geng.nodes_expanded}")
+    return out
+
+
+def run(datasets=None, kind: str = "random", n_queries: int | None = None,
+        k: int = 2, d_grail: int = 2):
+    datasets = datasets or (SMALL + LARGE + WEB)
+    n_queries = n_queries or (20_000 if quick_mode() else 100_000)
+    return {name: _run_workload(name, get_graph(name), kind, n_queries, k,
+                                d_grail)
+            for name in datasets}
+
+
+if __name__ == "__main__":
+    run(kind="random")
+    run(kind="positive")

@@ -1,0 +1,73 @@
+"""Markdown report generator for EXPERIMENTS.md §Dry-run / §Roofline.
+
+Reads artifacts/dryrun/<mesh>/<arch>/<shape>.json and emits the tables.
+
+    PYTHONPATH=src python -m benchmarks.report [--mesh single|multi]
+"""
+from __future__ import annotations
+
+import argparse
+
+from .roofline import load_cells, roofline_terms
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = []
+    for r in sorted(load_cells(mesh), key=lambda r: (r["arch"], r["shape"])):
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | |")
+            continue
+        c = r["collectives"]
+        sched = " ".join(f"{k}x{v['count']}" for k, v in c.items()
+                         if isinstance(v, dict) and v["count"])
+        rows.append(
+            f"| {r['arch']} | {r['shape']} "
+            f"| {r['memory']['peak_bytes'] / 2**30:.2f} "
+            f"| {r['flops']:.3g} | {r['bytes_accessed']:.3g} "
+            f"| {c['total_bytes']:.3g} | {sched} |")
+    hdr = ("| arch | shape | peak GiB/dev | HLO FLOPs | HLO bytes "
+           "| coll bytes | collective schedule |\n|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def roofline_table(mesh: str, full: bool = True) -> str:
+    rows = [roofline_terms(r) for r in load_cells(mesh) if r.get("ok")]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    if full:
+        hdr = ("| arch | shape | kind | compute (s) | memory (s) "
+               "| collective (s) | dominant | MODEL_FLOPS | useful "
+               "| roofline | peak GiB |\n" + "|---" * 11 + "|")
+        lines = [hdr]
+        for r in rows:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['kind']} "
+                f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+                f"| {r['collective_s']:.3e} | **{r['dominant']}** "
+                f"| {r['model_flops']:.3g} | {r['useful_frac']:.3f} "
+                f"| {r['roofline_frac']:.4f} | {r['peak_gib']:.2f} |")
+    else:
+        hdr = ("| arch | shape | compute (s) | memory (s) | collective (s) "
+               "| dominant | peak GiB |\n" + "|---" * 7 + "|")
+        lines = [hdr]
+        for r in rows:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} "
+                f"| {r['memory_s']:.3e} | {r['collective_s']:.3e} "
+                f"| {r['dominant']} | {r['peak_gib']:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--table", choices=["dryrun", "roofline"],
+                    default="roofline")
+    args = ap.parse_args()
+    if args.table == "dryrun":
+        print(dryrun_table(args.mesh))
+    else:
+        print(roofline_table(args.mesh, full=(args.mesh == "single")))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Benchmark harness entry point — one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV. Default is quick mode (scaled
+query counts / skips the full-TC baseline on web graphs); pass --full for
+paper-scale 100k-query workloads.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only construction,...]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    only = None
+    for a in sys.argv[1:]:
+        if a.startswith("--only"):
+            only = set(a.split("=", 1)[1].split(","))
+    from . import (ablation_filters, budget_sweep, construction,
+                   cover_quality, index_size, query_perf, roofline, scaling)
+    tables = {
+        "construction": construction.run,          # Table 3a / 6b
+        "index_size": index_size.run,              # Table 3b / 6a
+        "query_random": lambda: query_perf.run(kind="random"),    # 3c / 4c
+        "query_positive": lambda: query_perf.run(kind="positive"),  # 3d / 4d
+        "budget_sweep": budget_sweep.run,          # Tables 5-8
+        "cover_quality": cover_quality.run,        # §4.1
+        "ablation_filters": ablation_filters.run,  # §5.1-5.2
+        "scaling": scaling.run,                    # §7.5
+        "roofline": roofline.run,                  # deliverable (g)
+    }
+    t0 = time.time()
+    for name, fn in tables.items():
+        if only and name not in only:
+            continue
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn()
+        except Exception as e:  # pragma: no cover — keep the harness going
+            print(f"{name},NaN,ERROR={type(e).__name__}:{e}", flush=True)
+            raise
+    print(f"# total {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

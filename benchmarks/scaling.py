@@ -1,0 +1,35 @@
+"""Web-scale scaling curve (paper §7.5 analogue): build + query time vs n."""
+from __future__ import annotations
+
+from repro.graphs.generators import scale_free_digraph
+
+from .common import Timer, emit, quick_mode
+
+
+def run(sizes=None, avg_deg: float = 3.0, k: int = 2,
+        n_queries: int | None = None):
+    from repro.core.ferrari import build_index
+    from repro.core.query_jax import DeviceQueryEngine
+    from repro.core.workload import random_queries
+    sizes = sizes or ((10_000, 30_000, 100_000) if quick_mode()
+                      else (10_000, 100_000, 300_000, 1_000_000))
+    n_queries = n_queries or (10_000 if quick_mode() else 100_000)
+    results = {}
+    for n in sizes:
+        g = scale_free_digraph(n, avg_deg, seed=77)
+        with Timer() as tb:
+            ix = build_index(g, k=k, variant="G")
+        dev = DeviceQueryEngine(ix, n_dense_max=0)
+        qs, qt = random_queries(g, n_queries, seed=78)
+        dev.answer(qs[:256], qt[:256])
+        with Timer() as tq:
+            dev.answer(qs, qt)
+        emit(f"scaling/n={n}", tq.seconds / n_queries * 1e6,
+             f"build_s={tb.seconds:.2f};m={g.m};"
+             f"ns_per_q={tq.seconds / n_queries * 1e9:.0f}")
+        results[n] = {"build": tb.seconds, "query": tq.seconds}
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+# ^ before any jax import: this example demonstrates the expert-parallel
+#   MoE on a virtual 8-device (data 2, model 4) mesh.
+"""Expert-parallel MoE training with the shard_map dispatch (§Perf it. 2).
+
+Trains a smoke-scale MoE LM for a few steps twice — once with the baseline
+global-gather dispatch, once with the EP-local shard_map dispatch — and
+shows the loss trajectories coincide while the collective footprint differs
+(the lowered HLO collective counts are printed for both).
+
+    PYTHONPATH=src python examples/moe_expert_parallel.py
+"""
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_smoke
+from repro.data.tokens import TokenPipeline
+from repro.models import transformer as tf
+from repro.models.api import build_cell, materialize_state
+from repro.optim.optimizer import OptConfig
+
+
+def run(impl: str, mesh, steps: int = 8):
+    cfg = get_smoke("moonshot-v1-16b-a3b")
+    cfg = replace(cfg, moe=replace(cfg.moe, dispatch="sort", impl=impl,
+                                   capacity_factor=8.0))
+    from repro.configs.base import SHAPES_LM
+    shape = replace(SHAPES_LM["train_4k"], batch=8, seq_len=32)
+    cell = build_cell(cfg, "train_4k", mesh=mesh,
+                      opt_cfg=OptConfig(warmup_steps=2),
+                      shape_override=shape)
+    state = materialize_state(cell, cfg, "train_4k", jax.random.PRNGKey(0))
+    pipe = TokenPipeline(cfg.vocab, 8, 32, seed=1)
+    jitted = jax.jit(cell.step,
+                     in_shardings=(cell.state_shardings(),
+                                   cell.batch_shardings()),
+                     out_shardings=(cell.state_shardings(), None))
+    # collective footprint of the compiled step
+    lowered = jitted.lower(state, _batch(pipe, 0))
+    hlo = lowered.compile().as_text()
+    colls = {k: hlo.count(f" {k}(") + hlo.count(f" {k}-start(")
+             for k in ("all-reduce", "all-gather", "all-to-all")}
+    losses = []
+    for s in range(steps):
+        state, metrics = jitted(state, _batch(pipe, s))
+        losses.append(float(metrics["loss"]))
+    return losses, colls
+
+
+def _batch(pipe, step):
+    t, l = pipe.batch_at(step)
+    return {"tokens": jnp.asarray(t), "labels": jnp.asarray(l)}
+
+
+def main():
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    l_gather, c_gather = run("gather", mesh)
+    l_sm, c_sm = run("shard_map", mesh)
+    print(f"{'step':>4}  {'gather-loss':>12}  {'shard_map-loss':>14}")
+    for i, (a, b) in enumerate(zip(l_gather, l_sm)):
+        print(f"{i:>4}  {a:>12.4f}  {b:>14.4f}")
+    drift = max(abs(a - b) for a, b in zip(l_gather, l_sm))
+    print(f"\nmax loss drift: {drift:.5f} (same math, different dispatch)")
+    print(f"collectives/step  gather:    {c_gather}")
+    print(f"collectives/step  shard_map: {c_sm}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Search-space pruning with FERRARI — the paper's §1 motivating use.
+
+"Dijkstra's algorithm can be greatly sped up by avoiding the expansion of
+vertices that cannot reach the target node." This example runs Dijkstra on
+a weighted directed graph twice — plain, and pruned by a FERRARI
+reachability oracle — and reports the expansion reduction and that both
+find identical distances.
+
+    PYTHONPATH=src python examples/shortest_path_pruning.py
+"""
+import heapq
+import time
+
+import numpy as np
+
+from repro.core.ferrari import build_index
+from repro.core.query import QueryEngine
+from repro.graphs.generators import scale_free_digraph
+
+
+def dijkstra(indptr, indices, weights, s, t, can_reach=None):
+    n = len(indptr) - 1
+    dist = np.full(n, np.inf)
+    dist[s] = 0.0
+    pq = [(0.0, s)]
+    expanded = 0
+    while pq:
+        d, v = heapq.heappop(pq)
+        if v == t:
+            return d, expanded
+        if d > dist[v]:
+            continue
+        expanded += 1
+        for e in range(indptr[v], indptr[v + 1]):
+            w = indices[e]
+            # the paper's pruning rule: never expand toward nodes that
+            # cannot reach the target
+            if can_reach is not None and not can_reach(int(w)):
+                continue
+            nd = d + weights[e]
+            if nd < dist[w]:
+                dist[w] = nd
+                heapq.heappush(pq, (nd, w))
+    return np.inf, expanded
+
+
+def main():
+    n = 20_000
+    g = scale_free_digraph(n, 3.0, seed=3, back_p=0.2)
+    rng = np.random.default_rng(0)
+    weights = rng.uniform(1.0, 10.0, g.m)
+
+    print(f"graph: {g.n} nodes, {g.m} edges — building FERRARI-G (k=2)...")
+    ix = build_index(g, k=2, variant="G")
+    eng = QueryEngine(ix)
+
+    tot_plain = tot_pruned = 0
+    n_pairs = 0
+    t0 = time.perf_counter()
+    for trial in range(20):
+        s, t = rng.integers(0, n, 2)
+        d0, e0 = dijkstra(g.indptr, g.indices, weights, int(s), int(t))
+        d1, e1 = dijkstra(g.indptr, g.indices, weights, int(s), int(t),
+                          can_reach=lambda w: eng.reachable(w, int(t)))
+        assert (np.isinf(d0) and np.isinf(d1)) or abs(d0 - d1) < 1e-9, \
+            (d0, d1)
+        tot_plain += e0
+        tot_pruned += e1
+        n_pairs += 1
+    dt = time.perf_counter() - t0
+    print(f"{n_pairs} (s, t) pairs in {dt:.1f}s")
+    print(f"expanded nodes: plain {tot_plain}, pruned {tot_pruned} "
+          f"({tot_plain / max(tot_pruned, 1):.1f}x fewer) — identical "
+          f"distances")
+    print(f"oracle stats: {eng.stats}")
+
+
+if __name__ == "__main__":
+    main()

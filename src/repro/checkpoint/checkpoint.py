@@ -1,0 +1,151 @@
+"""Sharded checkpointing: npz shards + JSON manifest, async, elastic.
+
+Layout:  <dir>/step_<N>/
+             manifest.json      — step, mesh shape, tree structure, rng,
+                                  data-pipeline cursor, leaf -> shard map
+             shard_<i>.npz      — flattened leaf arrays (host-local shards;
+                                  single-process here, so one shard)
+         <dir>/step_<N>.done    — atomic commit marker (rename-committed)
+
+Restore re-materializes onto ANY mesh: arrays are loaded full and
+device_put with the new shardings (elastic re-mesh after failures /
+resizes). An interrupted save never leaves a .done marker, so restore
+always picks the last COMMITTED step — preemption-safe.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save_checkpoint(ckpt_dir, step: int, state, extra: Optional[dict] = None,
+                    mesh=None) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    tmp = ckpt_dir / f"_tmp_step_{step}"
+    final = ckpt_dir / f"step_{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    paths, leaves, _ = _flatten_with_paths(state)
+    arrays = {f"leaf_{i}": np.asarray(jax.device_get(x))
+              for i, x in enumerate(leaves)}
+    np.savez(tmp / "shard_0.npz", **arrays)
+    manifest = {
+        "step": step,
+        "saved_unix": time.time(),
+        "n_leaves": len(leaves),
+        "leaf_paths": paths,
+        "leaf_dtypes": [str(a.dtype) for a in arrays.values()],
+        "leaf_shapes": [list(a.shape) for a in arrays.values()],
+        "mesh": (None if mesh is None else
+                 {"axis_names": list(mesh.axis_names),
+                  "shape": [int(mesh.shape[a]) for a in mesh.axis_names]}),
+        "extra": extra or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)                        # atomic commit (same fs)
+    (ckpt_dir / f"step_{step}.done").touch()
+    return final
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = []
+    for marker in ckpt_dir.glob("step_*.done"):
+        try:
+            s = int(marker.stem.split("_")[1])
+        except (IndexError, ValueError):
+            continue
+        if (ckpt_dir / f"step_{s}" / "manifest.json").exists():
+            steps.append(s)
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir, state_like, step: Optional[int] = None,
+                       shardings=None):
+    """Restore into the structure of ``state_like``. ``shardings`` (same
+    pytree) re-places arrays on the CURRENT mesh — elastic restore."""
+    ckpt_dir = Path(ckpt_dir)
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        return None, None
+    d = ckpt_dir / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    with np.load(d / "shard_0.npz") as z:
+        arrays = [z[f"leaf_{i}"] for i in range(manifest["n_leaves"])]
+    _, leaves_like, treedef = _flatten_with_paths(state_like)
+    assert len(arrays) == len(leaves_like), "checkpoint/state structure mismatch"
+    if shardings is not None:
+        sh_leaves = jax.tree.leaves(
+            shardings, is_leaf=lambda x: x is None or hasattr(x, "spec"))
+        out = [jax.device_put(a.astype(l.dtype), s) if s is not None
+               else jax.numpy.asarray(a, dtype=l.dtype)
+               for a, l, s in zip(arrays, leaves_like, sh_leaves)]
+    else:
+        out = [jax.numpy.asarray(a, dtype=l.dtype)
+               for a, l in zip(arrays, leaves_like)]
+    state = jax.tree.unflatten(treedef, out)
+    return state, manifest
+
+
+class CheckpointManager:
+    """Async background writer + retention policy."""
+
+    def __init__(self, ckpt_dir, keep_last: int = 3, async_save: bool = True):
+        self.dir = Path(ckpt_dir)
+        self.keep_last = keep_last
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self.save_count = 0
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, state, extra: Optional[dict] = None, mesh=None):
+        self.wait()                               # one in flight at a time
+        # snapshot to host BEFORE returning control (device buffers may be
+        # donated by the next step)
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+
+        def _do():
+            save_checkpoint(self.dir, step, host_state, extra, mesh)
+            self._gc()
+
+        self.save_count += 1
+        if self.async_save:
+            self._thread = threading.Thread(target=_do, daemon=True)
+            self._thread.start()
+        else:
+            _do()
+
+    def _gc(self):
+        steps = sorted(
+            int(p.stem.split("_")[1]) for p in self.dir.glob("step_*.done"))
+        for s in steps[: -self.keep_last]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+            (self.dir / f"step_{s}.done").unlink(missing_ok=True)
+
+    def restore_latest(self, state_like, shardings=None):
+        self.wait()
+        return restore_checkpoint(self.dir, state_like, shardings=shardings)

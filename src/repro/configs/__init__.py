@@ -1,0 +1,1 @@
+from .registry import ARCHS, get_config, get_smoke  # noqa: F401

@@ -1,0 +1,38 @@
+"""Query workload generation (paper §7.2: 100k random / 100k positive)."""
+from __future__ import annotations
+
+import numpy as np
+
+from ..graphs.csr import CSR
+
+
+def random_queries(g: CSR, q: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return (rng.integers(0, g.n, size=q, dtype=np.int64),
+            rng.integers(0, g.n, size=q, dtype=np.int64))
+
+
+def positive_queries(g: CSR, q: int, seed: int = 0, max_walk: int = 32):
+    """Positive pairs via random forward walks (t is reachable from s by
+    construction). Nodes with no out-edges yield (s, s) self-pairs, which are
+    trivially positive — matching the paper's 'positive workload' semantics."""
+    rng = np.random.default_rng(seed)
+    indptr, indices = g.indptr, g.indices
+    deg = np.diff(indptr)
+    src = rng.integers(0, g.n, size=q, dtype=np.int64)
+    # bias sources toward nodes that actually have out-edges
+    has_out = np.flatnonzero(deg > 0)
+    if has_out.size:
+        redirect = rng.integers(0, has_out.size, size=q)
+        src = np.where(deg[src] > 0, src, has_out[redirect])
+    dst = src.copy()
+    steps = rng.integers(1, max_walk + 1, size=q)
+    for i in range(q):
+        v = int(src[i])
+        for _ in range(int(steps[i])):
+            lo, hi = indptr[v], indptr[v + 1]
+            if hi == lo:
+                break
+            v = int(indices[lo + rng.integers(0, hi - lo)])
+        dst[i] = v
+    return src, dst

@@ -1,0 +1,1 @@
+from .csr import CSR, build_csr, reverse_csr  # noqa: F401

@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: batched dense message passing (GNN molecule regime).
+
+For batches of small graphs (molecule shape: N=30 nodes, batch 128) sparse
+scatter/gather is pure overhead — the whole adjacency fits a VMEM tile, so
+message passing IS a batched dense matmul chain on the MXU:
+
+    out[b] = (adj[b] @ x[b]) @ w
+
+Grid: 1-D over the batch. Per-program working set at N=128, F=H=128:
+adj 64 KiB + x 64 KiB + w 64 KiB + out 64 KiB ≈ 0.25 MiB — double-buffers
+comfortably in 16 MiB VMEM. N/F/H padded to MXU-aligned multiples by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mp_kernel(adj_ref, x_ref, w_ref, out_ref):
+    adj = adj_ref[0]                         # (N, N)
+    x = x_ref[0]                             # (N, F)
+    w = w_ref[...]                           # (F, H)
+    agg = jnp.dot(adj, x, preferred_element_type=jnp.float32)
+    out_ref[0] = jnp.dot(agg, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def batched_mp(adj, x, w, *, interpret: bool = False):
+    """adj [B,N,N] f32, x [B,N,F] f32, w [F,H] f32 -> [B,N,H] f32."""
+    b, n, _ = adj.shape
+    f = x.shape[2]
+    h = w.shape[1]
+    return pl.pallas_call(
+        _mp_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, f), lambda i: (i, 0, 0)),
+            pl.BlockSpec((f, h), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n, h), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n, h), jnp.float32),
+        interpret=interpret,
+    )(adj, x, w)

@@ -1,0 +1,355 @@
+"""Pallas TPU kernel: flash attention (forward) — the LM-family hot spot.
+
+The jnp chunked-attention path (models/attention.py) is numerically correct
+and shards cleanly, but every S²-sized score tensor crosses an XLA fusion
+boundary (profiled: ~50% of prefill HLO bytes on phi3.5 — §Perf iteration
+3/5 analysis). On TPU the whole qkᵀ → mask → online-softmax → ·v chain must
+live in VMEM: this kernel keeps the (BQ, BK) score block in registers/VMEM,
+carries the running (m, l, acc) across the kv grid dimension in VMEM
+scratch, and only ever writes the [Sq, hd] output to HBM —
+HBM traffic drops from O(S²) to O(S·hd).
+
+Layout / tiling:
+  q: [B, H, Sq, hd]  k/v: [B, H, Sk, hd]   (caller expands GQA heads —
+     kv == H; see models.transformer._expand_kv)
+  grid = (B·H, Sq/BQ, Sk/BK); kv is the fastest (sequential) dim so the
+  scratch carry is valid; the output block (bh, qi) is revisited across kj
+  and written once on the last visit.
+  BQ = BK = 512 default: q/k/v blocks are 512×128×2 B = 128 KiB each; the
+  f32 score block is 1 MiB; acc 256 KiB — comfortably double-bufferable in
+  16 MiB VMEM. All matmul dims (512, hd ∈ {64, 128}) are MXU-aligned.
+
+Causal masking: block-level early-out (blocks strictly above the diagonal
+are skipped — the classic flash-attention triangle), plus an in-block
+additive bias on the diagonal blocks. Padding rows (Sk beyond the true
+length) are masked the same way via kv_len.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                      m_scr, l_scr, acc_scr,
+                      *, bq, bk, nk, causal, q_offset, kv_len, scale):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # absolute positions of this block's queries / keys
+    q0 = q_offset + qi * bq
+    k0 = kj * bk
+
+    # causal block-level early-out: skip blocks strictly above the diagonal
+    # and blocks entirely past the valid kv length
+    run = k0 < kv_len
+    if causal:
+        run = jnp.logical_and(run, k0 <= q0 + bq - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0]                                   # (BQ, hd)
+        k = k_ref[0]                                   # (BK, hd)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (BQ, BK)
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = kpos < kv_len
+        if causal:
+            ok = jnp.logical_and(ok, qpos >= kpos)
+        s = s + jnp.where(ok, 0.0, NEG_INF)
+
+        m_prev = m_scr[...]                            # (BQ, 1) f32
+        l_prev = l_scr[...]
+        m_blk = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(jnp.maximum(m_prev, m_blk), NEG_INF / 2)
+        p = jnp.exp(s - m_new)                         # masked lanes -> 0
+        c = jnp.exp(m_prev - m_new)
+        l_new = l_prev * c + jnp.sum(p, axis=1, keepdims=True)
+        acc = acc_scr[...] * c
+        acc += jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+        acc_scr[...] = acc
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        # logsumexp row stats — the backward's softmax reconstruction key
+        lse_ref[0] = (m_scr[...] + jnp.log(l))[:, 0]
+
+
+def _flash_fwd(q, k, v, causal, q_offset, block_q, block_k, interpret):
+    """Internal: returns (out [BH, Sq_p, hd] f-layout, lse [BH, Sq_p])."""
+    b, sq, h, hd = q.shape
+    _, sk, hk, _ = k.shape
+    assert hk == h, "expand GQA heads before the kernel (models._expand_kv)"
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    nq = -(-sq // bq)
+    nk = -(-sk // bk)
+    sq_p, sk_p = nq * bq, nk * bk
+
+    # [B, H, S, hd] layout: heads on the grid dim, seq×hd contiguous blocks
+    qt = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0))
+                 ).transpose(0, 2, 1, 3).reshape(b * h, sq_p, hd)
+    kt = jnp.pad(k, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0))
+                 ).transpose(0, 2, 1, 3).reshape(b * h, sk_p, hd)
+    vt = jnp.pad(v, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0))
+                 ).transpose(0, 2, 1, 3).reshape(b * h, sk_p, hd)
+
+    grid = (b * h, nq, nk)
+    kernel = functools.partial(
+        _flash_fwd_kernel, bq=bq, bk=bk, nk=nk, causal=causal,
+        q_offset=q_offset, kv_len=sk,
+        scale=1.0 / (hd ** 0.5))
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, kj: (bh, kj, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, kj: (bh, kj, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, bq), lambda bh, qi, kj: (bh, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, sq_p, hd), q.dtype),
+            jax.ShapeDtypeStruct((b * h, sq_p), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),     # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),     # running sum l
+            pltpu.VMEM((bq, hd), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out, lse, (qt, kt, vt, bq, bk, nq, nk, sq_p, sk_p)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_attention(q, k, v, causal, q_offset, block_q, block_k, interpret):
+    out, _, meta = _flash_fwd(q, k, v, causal, q_offset, block_q, block_k,
+                              interpret)
+    b, sq, h, hd = q.shape
+    sq_p = meta[7]
+    return (out.reshape(b, h, sq_p, hd).transpose(0, 2, 1, 3)[:, :sq]
+            .astype(q.dtype))
+
+
+def _flash_vjp_fwd(q, k, v, causal, q_offset, block_q, block_k, interpret):
+    out, lse, meta = _flash_fwd(q, k, v, causal, q_offset, block_q, block_k,
+                                interpret)
+    b, sq, h, hd = q.shape
+    sq_p = meta[7]
+    o = (out.reshape(b, h, sq_p, hd).transpose(0, 2, 1, 3)[:, :sq]
+         .astype(q.dtype))
+    return o, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(causal, q_offset, block_q, block_k, interpret,
+                   res, do):
+    """Flash backward (the classic two-kernel recomputation form):
+
+        Dᵢ  = Σ_h doᵢ·oᵢ            (rowsum, host-side einsum — O(S·hd))
+        Pᵢⱼ = exp(qᵢ·kⱼ·s − Lᵢ)     (recomputed blockwise in VMEM)
+        dvⱼ = Σᵢ Pᵢⱼ doᵢ
+        dSᵢⱼ = Pᵢⱼ (doᵢ·vⱼ − Dᵢ)
+        dqᵢ = s Σⱼ dSᵢⱼ kⱼ ;  dkⱼ = s Σᵢ dSᵢⱼ qᵢ
+
+    dq runs on a (bh, qi, kj) grid with a VMEM accumulator; dk/dv on a
+    (bh, kj, qi) grid — no S²-sized tensor ever reaches HBM.
+    """
+    q, k, v, out_f, lse = res
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    nq = -(-sq // bq)
+    nk = -(-sk // bk)
+    sq_p, sk_p = nq * bq, nk * bk
+    scale = 1.0 / (hd ** 0.5)
+
+    f = lambda x, s_p: jnp.pad(
+        x, ((0, 0), (0, s_p - x.shape[1]), (0, 0), (0, 0))
+    ).transpose(0, 2, 1, 3).reshape(b * h, s_p, -1)
+    qt, dot_ = f(q, sq_p), f(do, sq_p)
+    kt, vt = f(k, sk_p), f(v, sk_p)
+    # D = rowsum(do * o) — O(S·hd), fine outside the kernel (both already
+    # in the [BH, Sq_p, hd] kernel layout)
+    d_rows = jnp.sum(dot_.astype(jnp.float32)
+                     * out_f.astype(jnp.float32), axis=-1)
+
+    common = dict(bq=bq, bk=bk, causal=causal, q_offset=q_offset,
+                  kv_len=sk, q_len=sq, scale=scale)
+    dq = pl.pallas_call(
+        functools.partial(_flash_bwd_dq_kernel, nk=nk, **common),
+        grid=(b * h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, qi, kj: (bh, qi, 0)),   # q
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, kj: (bh, kj, 0)),   # k
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, kj: (bh, kj, 0)),   # v
+            pl.BlockSpec((1, bq, hd), lambda bh, qi, kj: (bh, qi, 0)),   # do
+            pl.BlockSpec((1, bq), lambda bh, qi, kj: (bh, qi)),          # lse
+            pl.BlockSpec((1, bq), lambda bh, qi, kj: (bh, qi)),          # D
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, qi, kj: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq_p, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq, hd), jnp.float32)],
+        interpret=interpret,
+    )(qt, kt, vt, dot_, lse, d_rows)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_flash_bwd_dkv_kernel, nq=nq, **common),
+        grid=(b * h, nk, nq),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, kj, qi: (bh, qi, 0)),   # q
+            pl.BlockSpec((1, bk, hd), lambda bh, kj, qi: (bh, kj, 0)),   # k
+            pl.BlockSpec((1, bk, hd), lambda bh, kj, qi: (bh, kj, 0)),   # v
+            pl.BlockSpec((1, bq, hd), lambda bh, kj, qi: (bh, qi, 0)),   # do
+            pl.BlockSpec((1, bq), lambda bh, kj, qi: (bh, qi)),          # lse
+            pl.BlockSpec((1, bq), lambda bh, kj, qi: (bh, qi)),          # D
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, hd), lambda bh, kj, qi: (bh, kj, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, kj, qi: (bh, kj, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, sk_p, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b * h, sk_p, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bk, hd), jnp.float32),
+                        pltpu.VMEM((bk, hd), jnp.float32)],
+        interpret=interpret,
+    )(qt, kt, vt, dot_, lse, d_rows)
+
+    unf = lambda x, s, s_p: (x.reshape(b, h, s_p, hd)
+                             .transpose(0, 2, 1, 3)[:, :s])
+    return (unf(dq, sq, sq_p).astype(q.dtype),
+            unf(dk, sk, sk_p).astype(k.dtype),
+            unf(dv, sk, sk_p).astype(v.dtype))
+
+
+_flash_attention.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def _block_common(q, k, qi, kj, lse_ref, bq, bk, causal, q_offset, kv_len,
+                  q_len, scale):
+    """Recompute the P block from saved row stats."""
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    q0 = q_offset + qi * bq
+    k0 = kj * bk
+    qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    qrow = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    ok = (kpos < kv_len) & (qrow < q_len)
+    if causal:
+        ok = jnp.logical_and(ok, qpos >= kpos)
+    lse = lse_ref[0][:, None]                    # (BQ, 1)
+    p = jnp.where(ok, jnp.exp(s - lse), 0.0)
+    return p, s
+
+
+def _flash_bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref,
+                         dq_ref, acc, *, bq, bk, nk, causal, q_offset,
+                         kv_len, q_len, scale):
+    qi, kj = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    run = kj * bk < kv_len
+    if causal:
+        run = jnp.logical_and(run, kj * bk <= q_offset + qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _body():
+        p, _ = _block_common(q_ref[0], k_ref[0], qi, kj, lse_ref, bq, bk,
+                             causal, q_offset, kv_len, q_len, scale)
+        dp = jax.lax.dot_general(do_ref[0], v_ref[0],
+                                 (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - d_ref[0][:, None])
+        acc[...] += scale * jax.lax.dot_general(
+            ds.astype(k_ref.dtype), k_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(kj == nk - 1)
+    def _finish():
+        dq_ref[0] = acc[...]
+
+
+def _flash_bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref,
+                          dk_ref, dv_ref, dk_acc, dv_acc, *, bq, bk, nq,
+                          causal, q_offset, kv_len, q_len, scale):
+    kj, qi = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    run = qi * bq < q_len
+    if causal:
+        # blocks with every qpos < k0 contribute nothing
+        run = jnp.logical_and(run,
+                              q_offset + qi * bq + bq - 1 >= kj * bk)
+
+    @pl.when(run)
+    def _body():
+        p, _ = _block_common(q_ref[0], k_ref[0], qi, kj, lse_ref, bq, bk,
+                             causal, q_offset, kv_len, q_len, scale)
+        dv_acc[...] += jax.lax.dot_general(
+            p.astype(do_ref.dtype), do_ref[0], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(do_ref[0], v_ref[0],
+                                 (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - d_ref[0][:, None])
+        dk_acc[...] += scale * jax.lax.dot_general(
+            ds.astype(q_ref.dtype), q_ref[0], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(qi == nq - 1)
+    def _finish():
+        dk_ref[0] = dk_acc[...]
+        dv_ref[0] = dv_acc[...]
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False):
+    """q: [B, Sq, H, hd]; k, v: [B, Sk, H, hd] (GQA pre-expanded).
+
+    Returns [B, Sq, H, hd] in q.dtype. ``q_offset`` = absolute position of
+    q[0] for prefill continuation / decode windows. Differentiable: the
+    backward recomputes P blockwise from saved (o, logsumexp) row stats —
+    the flash backward (no S² HBM traffic in either direction).
+    """
+    return _flash_attention(q, k, v, causal, q_offset, block_q, block_k,
+                            interpret)

@@ -1,0 +1,181 @@
+"""Pallas TPU kernel: batched reachability query classification (phase 1).
+
+The paper's query hot path (§5): for query (s, t), test the target's
+post-order id π(t) against the source's sorted interval slab, combined with
+the topological-order filter (Eq. 11), the topological level filter (§5.2)
+and the seed bitset rules (§5.1) — one fused, branch-free pass.
+
+TPU adaptation (DESIGN.md §3): instead of a per-query binary search
+(serialized, branchy), each query lane performs a masked compare against the
+FULL fixed-width slab (k_max ≤ 32 intervals). Queries live on the 128-wide
+lane dimension; the slab occupies sublanes, so the per-lane reduction over
+k_max is a cheap cross-sublane OR.
+
+Layout (prepared by ops.interval_stab — gathers are left to XLA, which emits
+them as HBM dynamic-gathers; the kernel streams the gathered slabs through
+VMEM tiles):
+
+  tgt_pi, tau_s, tau_t, lvl_s, lvl_t : (1, Q)  int32
+  begins, ends, exact                : (K, Q)  int32
+  sp_s, sm_s, sp_t, sm_t             : (W, Q)  uint32 seed bitsets
+  out verdict                        : (1, Q)  int32 {0 NEG, 1 POS, 2 UNKNOWN}
+
+Grid: 1-D over query tiles of BLOCK_Q lanes (BLOCK_Q = 1024 → VMEM per
+input ≈ K·1024·4 B = 128 KiB at K = 32; all 12 operands ≈ 0.6 MiB ≪ 16 MiB
+VMEM, leaving room for double-buffered pipelining).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG, POS, UNKNOWN = 0, 1, 2
+DEFAULT_BLOCK_Q = 1024
+
+
+def _stab_kernel(tgt_pi_ref, tau_s_ref, tau_t_ref, lvl_s_ref, lvl_t_ref,
+                 begins_ref, ends_ref, exact_ref,
+                 sp_s_ref, sm_s_ref, sp_t_ref, sm_t_ref,
+                 out_ref):
+    pt = tgt_pi_ref[...]                      # (1, BQ)
+    begins = begins_ref[...]                  # (K, BQ)
+    ends = ends_ref[...]
+    exact = exact_ref[...]
+
+    hit = (begins <= pt) & (pt <= ends)       # broadcast (K, BQ)
+    hit_exact = jnp.any(hit & (exact != 0), axis=0, keepdims=True)
+    hit_any = jnp.any(hit, axis=0, keepdims=True)
+
+    # topological filters (Eq. 11 and §5.2)
+    neg = tau_s_ref[...] >= tau_t_ref[...]
+    neg |= lvl_s_ref[...] <= lvl_t_ref[...]
+
+    # seed rules (§5.1)
+    sp_s = sp_s_ref[...]
+    sm_s = sm_s_ref[...]
+    sp_t = sp_t_ref[...]
+    sm_t = sm_t_ref[...]
+    seed_pos = jnp.any((sp_s & sm_t) != 0, axis=0, keepdims=True)
+    neg |= jnp.any((sm_s & ~sm_t) != 0, axis=0, keepdims=True)
+    neg |= jnp.any((sp_t & ~sp_s) != 0, axis=0, keepdims=True)
+
+    pos = hit_exact | seed_pos
+    neg |= ~hit_any
+    # pos rules are sound, so they take priority; then definite negatives;
+    # the remainder must expand (approximate hit)
+    out_ref[...] = jnp.where(pos, POS, jnp.where(neg, NEG, UNKNOWN)).astype(jnp.int32)
+
+
+def _stab_packed_kernel(meta_s_ref, meta_t_ref, slab_ref, out_ref, *, k):
+    """Gather-fused variant (§Perf iterations F1 + F4): 3 operands, 4-word
+    meta rows (BQ lanes): word0 = π | min(blevel,255)<<24, word1 = τ,
+    word2 = s⁺, word3 = s⁻; slab (2K, BQ): begins with the exact flag in
+    the SIGN bit (π < 2³¹ keeps it free), then ends. Saturated source
+    levels soundly suppress the ≤-filter (see kernels/ref.py).
+    """
+    slab = slab_ref[...]
+    braw = slab[:k]
+    ends = slab[k:]
+    begins = braw & jnp.int32(0x7FFFFFFF)
+    exact = braw < 0
+
+    pt = meta_t_ref[0:1, :] & jnp.int32(0xFFFFFF)
+    hit = (begins <= pt) & (pt <= ends)
+    hit_exact = jnp.any(hit & exact, axis=0, keepdims=True)
+    hit_any = jnp.any(hit, axis=0, keepdims=True)
+
+    lvl_s = (meta_s_ref[0:1, :] >> 24) & jnp.int32(0xFF)
+    lvl_t = (meta_t_ref[0:1, :] >> 24) & jnp.int32(0xFF)
+    neg = meta_s_ref[1:2, :] >= meta_t_ref[1:2, :]          # τ (Eq. 11)
+    neg |= (lvl_s < 255) & (lvl_s <= lvl_t)                 # level (§5.2)
+    sp_s = meta_s_ref[2:3, :].view(jnp.uint32)
+    sm_s = meta_s_ref[3:4, :].view(jnp.uint32)
+    sp_t = meta_t_ref[2:3, :].view(jnp.uint32)
+    sm_t = meta_t_ref[3:4, :].view(jnp.uint32)
+    seed_pos = (sp_s & sm_t) != 0
+    neg |= (sm_s & ~sm_t) != 0
+    neg |= (sp_t & ~sp_s) != 0
+
+    pos = hit_exact | seed_pos
+    neg |= ~hit_any
+    out_ref[...] = jnp.where(pos, POS,
+                             jnp.where(neg, NEG, UNKNOWN)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def interval_stab_classify_packed(meta_s, meta_t, slab_s,
+                                  *, block_q: int = DEFAULT_BLOCK_Q,
+                                  interpret: bool = False):
+    """Classify Q queries from the gather-fused layout.
+
+    meta_[st]: [Q, 4] int32; slab_s: [Q, 2K] int32. Verdict [Q] int32.
+    """
+    q = meta_s.shape[0]
+    k2 = slab_s.shape[1]
+    qp = -(-q // block_q) * block_q
+
+    def pad2(a, fill):
+        return jnp.pad(a, ((0, qp - q), (0, 0)), constant_values=fill).T
+
+    # pad: meta_s rows fill 1, meta_t rows fill 0 -> τ(s)=1 ≥ τ(t)=0
+    # classifies padded lanes NEG (cheap, discarded)
+    args = (pad2(meta_s, 1), pad2(meta_t, 0), pad2(slab_s, 0))
+    grid = (qp // block_q,)
+    out = pl.pallas_call(
+        functools.partial(_stab_packed_kernel, k=k2 // 2),
+        grid=grid,
+        in_specs=[pl.BlockSpec((4, block_q), lambda i: (0, i)),
+                  pl.BlockSpec((4, block_q), lambda i: (0, i)),
+                  pl.BlockSpec((k2, block_q), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, block_q), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, qp), jnp.int32),
+        interpret=interpret,
+    )(*args)
+    return out[0, :q]
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def interval_stab_classify(tgt_pi, tau_s, tau_t, lvl_s, lvl_t,
+                           begins, ends, exact,
+                           sp_s, sm_s, sp_t, sm_t,
+                           *, block_q: int = DEFAULT_BLOCK_Q,
+                           interpret: bool = False):
+    """Classify Q queries. All inputs already gathered per-query:
+
+    tgt_pi..lvl_t: [Q] int32; begins/ends/exact: [Q, K] int32;
+    sp_s..sm_t: [Q, W] uint32. Returns verdict [Q] int32.
+    """
+    q = tgt_pi.shape[0]
+    k = begins.shape[1]
+    w = sp_s.shape[1]
+    qp = -(-q // block_q) * block_q  # pad to a multiple of the block
+
+    def pad1(a, fill):
+        return jnp.pad(a, (0, qp - q), constant_values=fill)[None, :]
+
+    def pad2(a, fill):
+        return jnp.pad(a, ((0, qp - q), (0, 0)), constant_values=fill).T
+
+    # padding picks values that classify as NEG (cheap, discarded)
+    args = (
+        pad1(tgt_pi, 0), pad1(tau_s, 1), pad1(tau_t, 0),
+        pad1(lvl_s, 0), pad1(lvl_t, 0),
+        pad2(begins, 2**31 - 1), pad2(ends, -1), pad2(exact, 0),
+        pad2(sp_s, 0), pad2(sm_s, 0), pad2(sp_t, 0), pad2(sm_t, 0),
+    )
+    grid = (qp // block_q,)
+    row_spec = pl.BlockSpec((1, block_q), lambda i: (0, i))
+    slab_spec = pl.BlockSpec((k, block_q), lambda i: (0, i))
+    seed_spec = pl.BlockSpec((w, block_q), lambda i: (0, i))
+    out = pl.pallas_call(
+        _stab_kernel,
+        grid=grid,
+        in_specs=[row_spec] * 5 + [slab_spec] * 3 + [seed_spec] * 4,
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((1, qp), jnp.int32),
+        interpret=interpret,
+    )(*args)
+    return out[0, :q]

@@ -1,0 +1,111 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function mirrors its kernel's math exactly, in plain jax.numpy on the
+natural [Q, ...] layout. Kernel sweep tests assert allclose against these.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG, POS, UNKNOWN = 0, 1, 2
+
+
+def interval_stab_classify_ref(tgt_pi, tau_s, tau_t, lvl_s, lvl_t,
+                               begins, ends, exact,
+                               sp_s, sm_s, sp_t, sm_t):
+    """Oracle for kernels.interval_stab. Inputs in [Q]/[Q,K]/[Q,W] layout."""
+    pt = tgt_pi[:, None]
+    hit = (begins <= pt) & (pt <= ends)                    # [Q, K]
+    hit_exact = jnp.any(hit & (exact != 0), axis=1)
+    hit_any = jnp.any(hit, axis=1)
+
+    neg = tau_s >= tau_t
+    neg |= lvl_s <= lvl_t
+    seed_pos = jnp.any((sp_s & sm_t) != 0, axis=1)
+    neg |= jnp.any((sm_s & ~sm_t) != 0, axis=1)
+    neg |= jnp.any((sp_t & ~sp_s) != 0, axis=1)
+
+    pos = hit_exact | seed_pos
+    neg |= ~hit_any
+    return jnp.where(pos, POS, jnp.where(neg, NEG, UNKNOWN)).astype(jnp.int32)
+
+
+def interval_stab_classify_packed_ref(meta_s, meta_t, slab_s):
+    """Oracle for the gather-fused layout (§Perf iterations F1 + F4).
+
+    meta_[st]: [Q, 4] int32 rows — word0 = π | min(blevel,255)<<24,
+               word1 = τ, word2 = s⁺, word3 = s⁻;
+    slab_s:    [Q, 2K] int32 — begins (exact flag in sign bit) then ends.
+    Same verdict semantics as interval_stab_classify_ref; the level filter
+    is SOUNDLY suppressed when the source level saturates (a saturated
+    lvl_s=255 means the real level may exceed any lvl_t, so no pruning).
+    """
+    k = slab_s.shape[1] // 2
+    braw = slab_s[:, :k]
+    ends = slab_s[:, k:]
+    begins = braw & jnp.int32(0x7FFFFFFF)
+    exact = braw < 0
+
+    pt = meta_t[:, 0:1] & jnp.int32(0xFFFFFF)               # π(t)
+    hit = (begins <= pt) & (pt <= ends)                     # [Q, K]
+    hit_exact = jnp.any(hit & exact, axis=1)
+    hit_any = jnp.any(hit, axis=1)
+
+    lvl_s = (meta_s[:, 0] >> 24) & jnp.int32(0xFF)
+    lvl_t = (meta_t[:, 0] >> 24) & jnp.int32(0xFF)
+    neg = meta_s[:, 1] >= meta_t[:, 1]                      # τ filter (Eq.11)
+    neg |= (lvl_s < 255) & (lvl_s <= lvl_t)                 # level filter
+    sp_s = meta_s[:, 2].view(jnp.uint32)
+    sm_s = meta_s[:, 3].view(jnp.uint32)
+    sp_t = meta_t[:, 2].view(jnp.uint32)
+    sm_t = meta_t[:, 3].view(jnp.uint32)
+    seed_pos = (sp_s & sm_t) != 0
+    neg |= (sm_s & ~sm_t) != 0
+    neg |= (sp_t & ~sp_s) != 0
+
+    pos = hit_exact | seed_pos
+    neg |= ~hit_any
+    return jnp.where(pos, POS, jnp.where(neg, NEG, UNKNOWN)).astype(jnp.int32)
+
+
+def batched_mp_ref(adj, x, w):
+    """Oracle for kernels.batched_mp: per-graph dense message passing.
+
+    adj: [B, N, N] float (adj[b, i, j] = edge j->i weight or 0)
+    x:   [B, N, F] node features
+    w:   [F, H] projection applied after aggregation
+    Returns [B, N, H] = (adj @ x) @ w.
+    """
+    agg = jnp.einsum("bnm,bmf->bnf", adj, x)
+    return jnp.einsum("bnf,fh->bnh", agg, w)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, q_offset=0):
+    """Oracle for kernels.flash_attention: full masked softmax in f32.
+
+    q: [B, Sq, H, hd]; k, v: [B, Sk, H, hd] (GQA pre-expanded).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (hd ** 0.5)
+    if causal:
+        qpos = q_offset + jnp.arange(sq)
+        mask = qpos[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), -5e29)
+    p = jnp.exp(s - m)
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p / l, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def retrieval_score_ref(cands, interests):
+    """Oracle for kernels.retrieval_score: MIND multi-interest retrieval.
+
+    cands: [C, D] candidate item embeddings
+    interests: [I, D] user interest capsules
+    Returns [C] = max_i <cand, interest_i>  (MIND serving argmax-interest).
+    """
+    scores = cands @ interests.T            # [C, I]
+    return jnp.max(scores, axis=1)

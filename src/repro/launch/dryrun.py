@@ -1,0 +1,213 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). Everything below is ordinary.
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell:
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=..., donate...).lower(state, batch)
+        compiled = lowered.compile()
+        memory_analysis / cost_analysis / collective-byte parse of the
+        post-SPMD optimized HLO
+and write a JSON artifact to artifacts/dryrun/<mesh>/<arch>/<shape>.json.
+Failures (sharding mismatch, OOM at compile, unsupported collective) are
+bugs — the cell records the error and the run exits non-zero.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh single --arch llama3-8b
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi            # all
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from ..configs.base import shapes_for_family
+from ..configs.registry import ARCHS, get_config
+from ..models.api import build_cell
+from .mesh import make_production_mesh
+
+ART_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+# re for post-SPMD HLO collectives, e.g.:
+#   %all-reduce.5 = bf16[4,128]{1,0} all-reduce(...)
+#   ROOT %x = (f32[2,4]{...}, f32[8]{...}) all-gather(...)
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(pred|s4|s8|s16|s32|s64|u8|u16|u32|u64|bf16|f16|"
+                       r"f32|f64|c64|c128)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+                "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum output-operand sizes of every collective op in post-SPMD HLO.
+
+    Sizes are per-participant (HLO shapes are already per-device after SPMD
+    partitioning); grouped by collective kind.
+    """
+    out: dict = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        out.setdefault(kind, {"count": 0, "bytes": 0})
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += _shape_bytes(shape_str)
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def _compile_once(cfg, shape_name, mesh, rules, donate, analysis):
+    t0 = time.time()
+    cell = build_cell(cfg, shape_name, mesh=mesh, rules=rules,
+                      analysis=analysis)
+    in_sh = (cell.state_shardings(), cell.batch_shardings())
+    jitted = jax.jit(cell.step, in_shardings=in_sh,
+                     donate_argnums=(0,) if donate else ())
+    with mesh:
+        lowered = jitted.lower(cell.state_sds, cell.batch_sds)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    coll = parse_collective_bytes(hlo)
+    return cell, {
+        "seconds_lower": round(t_lower, 2),
+        "seconds_compile": round(t_compile, 2),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "generated_code_bytes": int(mem.generated_code_size_in_bytes),
+            # state is donated: outputs alias arguments, so live bytes
+            # ≈ max(args, outputs) + temps
+            "peak_bytes": int(max(mem.argument_size_in_bytes,
+                                  mem.output_size_in_bytes)
+                              + mem.temp_size_in_bytes),
+        },
+        "collectives": coll,
+        "hlo_n_lines": hlo.count("\n"),
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             rules: dict | None = None, save: bool = True,
+             donate: bool = True, with_analysis: bool = True) -> dict:
+    """Compile a cell twice: production form (scan — the deployable program;
+    memory + feasibility + collective schedule) and analysis form (unrolled —
+    trip-true FLOPs/bytes/collective volumes for §Roofline). Non-LM archs
+    have no scans; their production form doubles as the analysis form."""
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                 "mesh_shape": dict(zip(mesh.axis_names,
+                                        (int(s) for s in mesh.shape.values()))),
+                 "n_devices": int(np.prod(list(mesh.shape.values()))),
+                 "ok": False}
+    t0 = time.time()
+    try:
+        cell, prod = _compile_once(cfg, shape_name, mesh, rules, donate,
+                                   analysis=False)
+        rec.update(prod)
+        rec["kind"] = cell.kind
+        rec["model_flops"] = (int(cell.model_flops_fn())
+                              if cell.model_flops_fn else None)
+        if with_analysis and cfg.family == "lm":
+            _, ana = _compile_once(cfg, shape_name, mesh, rules, donate,
+                                   analysis=True)
+            # analysis memory numbers are meaningless (unchunked attention)
+            ana.pop("memory", None)
+            rec["analysis"] = ana
+        else:
+            rec["analysis"] = {k: rec[k] for k in
+                               ("flops", "bytes_accessed", "collectives")}
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — recorded, rerun fails loudly
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["seconds_total"] = round(time.time() - t0, 2)
+    if save:
+        d = ART_DIR / mesh_kind / arch
+        d.mkdir(parents=True, exist_ok=True)
+        (d / f"{shape_name}.json").write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def iter_cells(archs=None, shapes=None):
+    for arch in (archs or ARCHS):
+        cfg = get_config(arch)
+        fam_shapes = shapes_for_family(cfg.family)
+        for shape_name in fam_shapes:
+            if shapes and shape_name not in shapes:
+                continue
+            yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--arch", action="append", default=None)
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-analysis", action="store_true",
+                    help="skip the unrolled analysis compile (multi-pod "
+                         "feasibility pass; the roofline table reads the "
+                         "single-pod artifacts)")
+    args = ap.parse_args()
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    failures = []
+    for mesh_kind in meshes:
+        for arch, shape_name in iter_cells(args.arch, args.shape):
+            out = ART_DIR / mesh_kind / arch / f"{shape_name}.json"
+            if args.skip_existing and out.exists():
+                prev = json.loads(out.read_text())
+                if prev.get("ok"):
+                    print(f"[skip] {mesh_kind}/{arch}/{shape_name}")
+                    continue
+            rec = run_cell(arch, shape_name, mesh_kind,
+                           with_analysis=not args.no_analysis)
+            status = "OK " if rec["ok"] else "FAIL"
+            extra = (f"flops={rec.get('flops', 0):.3g} "
+                     f"coll={rec.get('collectives', {}).get('total_bytes', 0):.3g}B "
+                     f"peak={rec.get('memory', {}).get('peak_bytes', 0) / 2**30:.2f}GiB"
+                     if rec["ok"] else rec.get("error", ""))
+            print(f"[{status}] {mesh_kind}/{arch}/{shape_name} "
+                  f"({rec['seconds_total']}s) {extra}", flush=True)
+            if not rec["ok"]:
+                failures.append((mesh_kind, arch, shape_name))
+    if failures:
+        print(f"\n{len(failures)} FAILURES: {failures}")
+        raise SystemExit(1)
+    print("\nall dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,244 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# Must run before any other import (jax locks device count at first init).
+"""HLO profiler — per-op FLOP / byte / collective attribution for §Perf.
+
+The dry-run gives aggregate cost_analysis numbers; hillclimbing needs to
+know WHICH ops dominate. This tool lowers+compiles a cell exactly like
+launch.dryrun, then walks the optimized HLO text and attributes
+
+    * dot FLOPs      (2·M·N·K from the dot's operand/result shapes)
+    * op bytes       (operand + result sizes — fusion-boundary approximation)
+    * collective bytes (per kind, per op_name)
+
+to the originating jaxpr ``op_name`` metadata (e.g.
+``jit(step)/.../bqkgh,bskh->bkgqs/dot_general``), aggregated on a trimmed
+prefix so all 48 unrolled layers of the same einsum fold into one row.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.hloprof \
+        --arch moonshot-v1-16b-a3b --shape train_4k [--mesh single] \
+        [--top 30] [--analysis/--production]
+"""
+import argparse
+import json
+import re
+from collections import defaultdict
+from pathlib import Path
+
+# --------------------------------------------------------------- HLO parse --
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+                "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(
+    r"(pred|s4|s8|s16|s32|s64|u8|u16|u32|u64|bf16|f16|f32|f64|c64|c128)"
+    r"\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^=]*?\)|\S+))\s+"
+    r"([\w\-]+)\(")
+_METADATA_RE = re.compile(r'op_name="([^"]*)"')
+_DNUMS_RE = re.compile(
+    r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+
+def _dims(shape_str: str):
+    """All (dtype, [dims]) tuples in a (possibly tuple-) shape string."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _nbytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _prod(xs):
+    n = 1
+    for x in xs:
+        n *= x
+    return n
+
+
+def _trim_op_name(name: str) -> str:
+    """Fold per-layer/unrolled duplicates: drop trailing .N suffixes and
+    collapse while/remat wrappers so identical einsums aggregate."""
+    name = re.sub(r"\.\d+", "", name)
+    name = name.replace("while/body/closed_call/", "")
+    name = name.replace("checkpoint/", "")
+    name = name.replace("transpose(", "(")
+    return name
+
+
+def parse_hlo(hlo: str):
+    """Yield (result_name, op_kind, result_shape_str, line, in_entry) per op.
+
+    ``in_entry`` marks ops in the ENTRY computation — only those sit at
+    fusion boundaries (ops inside %fused_computation bodies execute inside
+    one fusion and must not be byte-counted)."""
+    in_entry = False
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY "):
+            in_entry = True
+        elif line.startswith("}"):
+            in_entry = False
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, kind = m.groups()
+        yield name, kind, shape_str, line, in_entry
+
+
+def dot_flops(line: str, result_shape: str, symtab: dict) -> int:
+    """FLOPs of one dot: 2 × (result elements) × (contraction size).
+
+    Contraction size is read from the lhs operand's shape (resolved through
+    ``symtab``: result-name -> shape string; compiled.as_text() uses the
+    short operand form ``dot(%a, %b)`` without inline types).
+    """
+    inner = line[line.index("dot(") + 4:].split(")", 1)[0]
+    args = [a.strip().lstrip("%") for a in inner.split(",")]
+    shapes = _dims(inner)                       # long form: inline types
+    if not shapes and args and args[0] in symtab:
+        shapes = _dims(symtab[args[0]])         # short form: symbol table
+    if not shapes:
+        return 0
+    lhs_dims = shapes[0][1]
+    mc = _DNUMS_RE.search(line)
+    contract = [int(i) for i in mc.group(1).split(",") if i] if mc else []
+    k = _prod([lhs_dims[i] for i in contract if i < len(lhs_dims)]) \
+        if contract else (lhs_dims[-1] if lhs_dims else 1)
+    out_elems = sum(_prod(d) for _, d in _dims(result_shape))
+    return 2 * out_elems * k
+
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def profile_hlo(hlo: str, top: int = 30):
+    flops_by = defaultdict(int)
+    bytes_by = defaultdict(int)
+    coll_by = defaultdict(int)
+    counts = defaultdict(int)
+    tot_dot_flops = 0
+    ops = list(parse_hlo(hlo))
+    symtab = {name: shape_str for name, _, shape_str, _, _ in ops}
+    for name, kind, shape_str, line, in_entry in ops:
+        mm = _METADATA_RE.search(line)
+        op_name = _trim_op_name(mm.group(1)) if mm else f"<{kind}>"
+        if kind == "dot":
+            f = dot_flops(line, shape_str, symtab)
+            flops_by[op_name] += f
+            tot_dot_flops += f
+            counts[op_name] += 1
+        base = kind.replace("-start", "")
+        if base in _COLL_KINDS:
+            coll_by[f"{base} :: {op_name}"] += _nbytes(shape_str)
+        # byte attribution: ENTRY-computation ops only (ops inside
+        # %fused_computation bodies are boundary-free — counting them
+        # over-attributes); result + resolved operand shapes
+        if in_entry and (kind in (
+                "fusion", "dot", "gather", "scatter", "sort",
+                "convolution", "reduce", "transpose", "copy",
+                "dynamic-slice", "dynamic-update-slice", "broadcast",
+                "concatenate", "reshape", "convert", "iota", "while",
+                "conditional", "custom-call") or base in _COLL_KINDS):
+            b = _nbytes(shape_str)
+            inner = line.split("(", 1)[1] if "(" in line else ""
+            for a in inner.split(")", 1)[0].split(","):
+                a = a.strip().lstrip("%")
+                if a in symtab:
+                    b += _nbytes(symtab[a])
+            bytes_by[f"{kind} :: {op_name}"] += b
+    return {
+        "total_dot_flops": tot_dot_flops,
+        "flops_top": sorted(flops_by.items(), key=lambda kv: -kv[1])[:top],
+        "flops_counts": counts,
+        "bytes_top": sorted(bytes_by.items(), key=lambda kv: -kv[1])[:top],
+        "coll_top": sorted(coll_by.items(), key=lambda kv: -kv[1])[:top],
+    }
+
+
+def report(prof: dict, model_flops_per_chip: float | None = None,
+           file=None) -> None:
+    p = lambda *a: print(*a, file=file)
+    tot = prof["total_dot_flops"]
+    p(f"total dot FLOPs (per participant): {tot:.4g}")
+    if model_flops_per_chip:
+        p(f"model FLOPs/chip: {model_flops_per_chip:.4g} "
+          f"(useful frac of dots: {model_flops_per_chip / max(tot, 1):.4f})")
+    p("\n--- top dot FLOPs by op_name ---")
+    for name, f in prof["flops_top"]:
+        n = prof["flops_counts"][name]
+        p(f"{f:>14.4g}  ({f / max(tot, 1):6.2%})  x{n:<4d} {name}")
+    p("\n--- top bytes by op (fusion-boundary approx) ---")
+    for name, b in prof["bytes_top"]:
+        p(f"{b / 2**30:>10.3f} GiB  {name}")
+    p("\n--- collective bytes by op_name ---")
+    for name, b in prof["coll_top"]:
+        p(f"{b / 2**20:>10.2f} MiB  {name}")
+
+
+# ------------------------------------------------------------------ driver --
+
+def profile_cell(arch: str, shape_name: str, mesh_kind: str = "single",
+                 analysis: bool = True, top: int = 30, rules=None):
+    import jax  # deferred: after XLA_FLAGS
+    from ..configs.registry import get_config
+    from ..models.api import build_cell
+    from .mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    cell = build_cell(cfg, shape_name, mesh=mesh, rules=rules,
+                      analysis=analysis)
+    in_sh = (cell.state_shardings(), cell.batch_shardings())
+    jitted = jax.jit(cell.step, in_shardings=in_sh, donate_argnums=(0,))
+    with mesh:
+        lowered = jitted.lower(cell.state_sds, cell.batch_sds)
+        compiled = lowered.compile()
+        hlo = compiled.as_text()
+        cost = compiled.cost_analysis()
+    prof = profile_hlo(hlo, top=top)
+    prof["cost_analysis_flops"] = float(cost.get("flops", 0.0))
+    prof["cost_analysis_bytes"] = float(cost.get("bytes accessed", 0.0))
+    n_dev = mesh.devices.size
+    mf = cell.model_flops_fn() / n_dev if cell.model_flops_fn else None
+    return prof, mf, hlo
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--production", action="store_true",
+                    help="profile the scan (production) form instead of the "
+                         "unrolled analysis form")
+    ap.add_argument("--top", type=int, default=30)
+    ap.add_argument("--save-hlo", default=None,
+                    help="also dump the optimized HLO text to this path")
+    args = ap.parse_args()
+    prof, mf, hlo = profile_cell(args.arch, args.shape, args.mesh,
+                                 analysis=not args.production, top=args.top)
+    print(f"cost_analysis: flops={prof['cost_analysis_flops']:.4g} "
+          f"bytes={prof['cost_analysis_bytes']:.4g}")
+    report(prof, mf)
+    if args.save_hlo:
+        Path(args.save_hlo).write_text(hlo)
+        print(f"\nHLO saved to {args.save_hlo}")
+
+
+if __name__ == "__main__":
+    main()

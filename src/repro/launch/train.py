@@ -1,0 +1,186 @@
+"""Fault-tolerant training driver.
+
+Wires together: config registry → step builder (models/api) → data pipeline
+→ checkpoint manager → heartbeat/straggler monitors. The supervisor loop
+catches WorkerFailure/Preemption, rolls back to the last committed
+checkpoint, re-meshes over the surviving device set (elastic) and resumes.
+
+CLI (smoke-scale by default — full configs are for the dry-run/cluster):
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --smoke --steps 20 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+from typing import Optional
+
+import jax
+import numpy as np
+
+from ..checkpoint.checkpoint import CheckpointManager
+from ..configs.base import shapes_for_family
+from ..configs.registry import get_config, get_smoke
+from ..data.tokens import TokenPipeline
+from ..models.api import build_cell, materialize_state
+from ..optim.optimizer import OptConfig
+from ..runtime.fault_tolerance import (FaultInjector, HeartbeatMonitor,
+                                       Preemption, StragglerDetector,
+                                       WorkerFailure)
+
+
+class Trainer:
+    def __init__(self, arch: str, smoke: bool = True, shape: str = "train_4k",
+                 ckpt_dir: Optional[str] = None, mesh=None,
+                 opt_cfg: Optional[OptConfig] = None,
+                 fault_injector: Optional[FaultInjector] = None,
+                 batch_override: Optional[int] = None,
+                 seq_override: Optional[int] = None, seed: int = 0,
+                 elastic=None):
+        self.elastic = elastic
+        self.cfg = get_smoke(arch) if smoke else get_config(arch)
+        shp = shapes_for_family(self.cfg.family)[shape]
+        if batch_override or seq_override:
+            from dataclasses import replace
+            shp = replace(shp, batch=batch_override or shp.batch,
+                          seq_len=seq_override or shp.seq_len)
+        self.shape = shp
+        self.shape_name = shape
+        self.mesh = mesh
+        self.opt_cfg = opt_cfg or OptConfig(warmup_steps=10)
+        self.cell = self._build_cell()
+        self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        self.monitor = HeartbeatMonitor(n_workers=1, timeout_s=3600)
+        self.straggler = StragglerDetector()
+        self.injector = fault_injector
+        self.seed = seed
+        self.pipeline = TokenPipeline(self.cfg.vocab, shp.batch, shp.seq_len,
+                                      seed=seed)
+        self.state = None
+        self.step_idx = 0
+        self.recoveries = 0
+        self.history: list = []
+
+    def _build_cell(self):
+        # rebuilt on every (re-)mesh — this is the elastic hook
+        cell = build_cell(self.cfg, self.shape_name, mesh=self.mesh,
+                          opt_cfg=self.opt_cfg, shape_override=self.shape)
+        if self.shape.kind != "train":
+            raise ValueError("Trainer drives train shapes only")
+        # out_shardings pins the returned state to the SAME shardings the
+        # next call expects (without it the compiler may hand donated params
+        # back in the ZeRO-1 layout and step 2 rejects them)
+        self._jitted = jax.jit(cell.step,
+                               in_shardings=(cell.state_shardings(),
+                                             cell.batch_shardings()),
+                               out_shardings=(cell.state_shardings(), None),
+                               donate_argnums=(0,))
+        return cell
+
+    # ----------------------------------------------------------- lifecycle
+    def init_state(self):
+        self.state = materialize_state(self.cell, self.cfg, self.shape_name,
+                                       jax.random.PRNGKey(self.seed))
+
+    def restore_or_init(self):
+        if self.ckpt is not None:
+            restored, manifest = self.ckpt.restore_latest(
+                self.cell.state_sds, self.cell.state_shardings())
+            if restored is not None:
+                self.state = restored
+                self.step_idx = manifest["extra"]["data_state"]["step"]
+                return True
+        self.init_state()
+        return False
+
+    def _one_step(self):
+        toks, labs = self.pipeline.batch_at(self.step_idx)
+        import jax.numpy as jnp
+        batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)}
+        t0 = time.perf_counter()
+        if self.injector is not None:
+            self.injector.maybe_fire(self.step_idx)
+        self.state, metrics = self._jitted(self.state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        slow = self.straggler.observe(self.step_idx, dt)
+        self.monitor.beat(0)
+        self.history.append({"step": self.step_idx, "loss": loss,
+                             "seconds": dt, "straggler": slow})
+        self.step_idx += 1
+        return loss
+
+    def run(self, n_steps: int, ckpt_every: int = 10, max_recoveries: int = 3,
+            log_every: int = 10):
+        while self.step_idx < n_steps:
+            try:
+                loss = self._one_step()
+                if self.step_idx % log_every == 0 or self.step_idx == n_steps:
+                    print(f"step {self.step_idx:5d} loss {loss:.4f} "
+                          f"ewma {self.straggler.ewma:.3f}s", flush=True)
+                if self.ckpt and self.step_idx % ckpt_every == 0:
+                    self.ckpt.save(self.step_idx, self.state,
+                                   extra={"data_state":
+                                          self.pipeline.state(self.step_idx)},
+                                   mesh=self.mesh)
+            except (WorkerFailure, Preemption) as e:
+                self.recoveries += 1
+                print(f"[FT] {e} at step {self.step_idx}; "
+                      f"recovery {self.recoveries}/{max_recoveries}",
+                      flush=True)
+                if self.recoveries > max_recoveries:
+                    raise
+                if isinstance(e, WorkerFailure):
+                    self.monitor.mark_dead(e.worker)
+                    if self.elastic is not None:
+                        # elastic: drop the failed worker's devices and
+                        # re-plan the largest survivor mesh
+                        self.elastic.exclude(self.elastic.devices_of_worker(
+                            e.worker, self.monitor.n_workers))
+                        self.mesh = self.elastic.current_mesh()
+                        print(f"[FT] re-meshed (gen {self.elastic.generation})"
+                              f" over {len(self.elastic.alive)} devices",
+                              flush=True)
+                # rebuild the step for the (possibly new) mesh, then restore
+                # from the last committed checkpoint with the NEW shardings
+                self.cell = self._build_cell()
+                if not self.restore_or_init():
+                    print("[FT] no checkpoint found: cold restart", flush=True)
+                sh = self.cell.state_shardings()
+                if sh is not None:
+                    # reshard whatever restore/init produced onto the new
+                    # mesh (restore paths may return old-mesh arrays)
+                    from ..runtime.elastic import reshard
+                    self.state = reshard(self.state, sh)
+        if self.ckpt:
+            self.ckpt.save(self.step_idx, self.state,
+                           extra={"data_state":
+                                  self.pipeline.state(self.step_idx)},
+                           mesh=self.mesh)
+            self.ckpt.wait()
+        return self.history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    args = ap.parse_args()
+    tr = Trainer(args.arch, smoke=args.smoke, shape=args.shape,
+                 ckpt_dir=args.ckpt_dir, batch_override=args.batch,
+                 seq_override=args.seq)
+    tr.restore_or_init()
+    hist = tr.run(args.steps, ckpt_every=args.ckpt_every)
+    print(f"done: {len(hist)} steps, final loss {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

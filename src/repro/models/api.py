@@ -1,0 +1,463 @@
+"""Uniform step contract for every (architecture × shape) cell.
+
+``build_cell(cfg, shape, mesh?, opt_cfg?)`` returns a CellSpec with
+
+    step(state, batch) -> (new_state, out)
+
+plus abstract state/batch (ShapeDtypeStructs — no allocation; the dry-run
+lowers directly from these) and their NamedShardings when a mesh is given.
+
+Kinds: train (grad + AdamW update), decode (one token vs KV cache),
+prefill (prompt -> cache), serve / retrieval (recsys), classify (ferrari).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import (FerrariServeConfig, GNNConfig, LMConfig,
+                            RecsysConfig, shapes_for_family)
+from ..optim.optimizer import OptConfig, adamw_init, adamw_update
+from ..parallel import sharding as shd
+from ..parallel.sharding import NO_SHARDING, ShardingCtx
+from . import gnn as gnn_mod
+from . import recsys as rec_mod
+from . import transformer as tf_mod
+
+PAD_UNIT = 512  # lcm-safe padding for data-parallel dims (2 pods ×16×16)
+
+
+def _pad(x: int, unit: int = PAD_UNIT) -> int:
+    return -(-x // unit) * unit
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+@dataclass
+class CellSpec:
+    arch: str
+    shape_name: str
+    kind: str
+    step: Callable                       # (state, batch) -> (state, out)
+    state_sds: Any
+    batch_sds: Dict[str, Any]
+    state_logical: Any
+    batch_logical: Dict[str, Any]
+    ctx: ShardingCtx
+    model_flops_fn: Optional[Callable] = None   # MODEL_FLOPS for §Roofline
+    shape: Any = None
+
+    def state_shardings(self, zero1: bool = True):
+        if self.ctx.mesh is None:
+            return None
+        is_leaf = lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
+        out = jax.tree.map(
+            lambda lg, s: self.ctx.sharding(lg, s.shape),
+            self.state_logical, self.state_sds, is_leaf=is_leaf)
+        if zero1 and isinstance(out, dict) and "opt" in out:
+            from jax.sharding import NamedSharding
+            mesh = self.ctx.mesh
+            for mv in ("m", "v"):
+                out["opt"][mv] = jax.tree.map(
+                    lambda sh, s: NamedSharding(
+                        mesh, shd.zero1_spec(sh.spec, s.shape, mesh)),
+                    out["opt"][mv], self.state_sds["opt"][mv])
+        return out
+
+    def batch_shardings(self):
+        if self.ctx.mesh is None:
+            return None
+        return {k: self.ctx.sharding(self.batch_logical[k], v.shape)
+                for k, v in self.batch_sds.items()}
+
+
+# ------------------------------------------------------------------- LM ----
+
+def _lm_state(cfg: LMConfig, kind: str, shape, ctx, with_opt: bool,
+              zero1: bool = True):
+    p_sds = tf_mod.abstract_params(cfg)
+    p_log = tf_mod.param_logical_axes(cfg)
+    state_sds = {"params": p_sds}
+    state_log = {"params": p_log}
+    if with_opt:
+        o_sds = jax.eval_shape(adamw_init, p_sds)
+        state_sds["opt"] = o_sds
+        # m/v share the param logical axes; ZeRO-1 handled in state_shardings
+        state_log["opt"] = {"m": p_log, "v": p_log, "step": ()}
+    if kind in ("decode",):
+        c_sds = jax.eval_shape(
+            lambda: tf_mod.init_cache(cfg, shape.batch, shape.seq_len))
+        state_sds["cache"] = c_sds
+        ca = tf_mod.cache_logical_axes(cfg)
+        state_log["cache"] = ca
+    return state_sds, state_log
+
+
+def _lm_cell(cfg: LMConfig, shape, ctx: ShardingCtx, opt_cfg: OptConfig,
+             analysis: bool = False):
+    """``analysis=True`` lowers the trip-true form for XLA cost analysis:
+    unrolled layers, single-block attention, single-chunk loss, no grad
+    accumulation (scan bodies are costed ONCE by HloCostAnalysis — the
+    production scan form undercounts FLOPs by the trip count)."""
+    B, S = shape.batch, shape.seq_len
+    fw = dict(scan_layers=not analysis)
+    if analysis:
+        fw.update(q_chunk=S, kv_chunk=S)
+    if shape.kind == "train":
+        state_sds, state_log = _lm_state(cfg, "train", shape, ctx, True)
+        batch_sds = {"tokens": sds((B, S), jnp.int32),
+                     "labels": sds((B, S), jnp.int32)}
+        batch_log = {"tokens": ("batch", None), "labels": ("batch", None)}
+
+        mb = 1 if analysis else max(1, cfg.microbatches)
+        assert B % mb == 0, (B, mb)
+        loss_chunk = None if analysis else 16384
+
+        def step(state, batch):
+            def loss_fn(p, toks, labs):
+                return tf_mod.logits_and_loss(cfg, p, toks, labs, ctx,
+                                              loss_chunk=loss_chunk, **fw)
+
+            params = state["params"]
+            if mb == 1:
+                loss, grads = jax.value_and_grad(loss_fn)(
+                    params, batch["tokens"], batch["labels"])
+            else:
+                # gradient accumulation: bounds live activations to one
+                # microbatch; XLA overlaps microbatch i's psum with i+1's
+                # backward under SPMD
+                toks = batch["tokens"].reshape(mb, B // mb, S)
+                labs = batch["labels"].reshape(mb, B // mb, S)
+
+                def mb_step(acc, tb):
+                    t, l = tb
+                    loss, g = jax.value_and_grad(loss_fn)(params, t, l)
+                    acc = jax.tree.map(
+                        lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+                    return acc, loss
+                acc0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                grads, losses = jax.lax.scan(mb_step, acc0, (toks, labs))
+                grads = jax.tree.map(lambda g: g / mb, grads)
+                loss = jnp.mean(losses)
+            new_p, new_opt, metrics = adamw_update(
+                opt_cfg, params, grads, state["opt"])
+            metrics["loss"] = loss
+            return {"params": new_p, "opt": new_opt}, metrics
+
+        flops_fn = lambda: 6 * cfg.active_param_count() * B * S
+        return step, state_sds, state_log, batch_sds, batch_log, flops_fn
+
+    if shape.kind == "decode":
+        state_sds, state_log = _lm_state(cfg, "decode", shape, ctx, False)
+        batch_sds = {"token": sds((B, 1), jnp.int32),
+                     "pos": sds((), jnp.int32)}
+        batch_log = {"token": ("batch", None), "pos": ()}
+
+        def step(state, batch):
+            logits, cache = tf_mod.decode_step(
+                cfg, state["params"], state["cache"], batch["token"],
+                batch["pos"], ctx, scan_layers=not analysis)
+            return {"params": state["params"], "cache": cache}, logits
+
+        # decode FLOPs: 2*N_active per token + attention O(S)
+        att = 4 * cfg.n_layers * cfg.n_kv_heads * cfg.hd * S * B \
+            * (cfg.n_heads // cfg.n_kv_heads)
+        flops_fn = lambda: 2 * cfg.active_param_count() * B + att
+        return step, state_sds, state_log, batch_sds, batch_log, flops_fn
+
+    if shape.kind == "prefill":
+        state_sds, state_log = _lm_state(cfg, "prefill", shape, ctx, False)
+        batch_sds = {"tokens": sds((B, S), jnp.int32)}
+        batch_log = {"tokens": ("batch", None)}
+
+        def step(state, batch):
+            logits, cache = tf_mod.prefill(cfg, state["params"],
+                                           batch["tokens"], S, ctx, **fw)
+            return state, {"logits": logits, "cache": cache}
+
+        flops_fn = lambda: 2 * cfg.active_param_count() * B * S
+        return step, state_sds, state_log, batch_sds, batch_log, flops_fn
+    raise ValueError(shape.kind)
+
+
+# ------------------------------------------------------------------ GNN ----
+
+def _gnn_batch_full(shape, pad=True):
+    n = _pad(shape.n_nodes) if pad else shape.n_nodes
+    m = _pad(shape.n_edges) if pad else shape.n_edges
+    batch_sds = {"feats": sds((n, shape.d_feat), jnp.float32),
+                 "src": sds((m,), jnp.int32), "dst": sds((m,), jnp.int32),
+                 "labels": sds((n,), jnp.int32)}
+    batch_log = {"feats": ("nodes", None), "src": ("edges",),
+                 "dst": ("edges",), "labels": ("nodes",)}
+    return n, m, batch_sds, batch_log
+
+
+def _gnn_subgraph_sizes(shape):
+    """Sampled-subgraph (GraphSAINT-style) sizes from batch_nodes × fanout."""
+    hops = [shape.batch_nodes]
+    for f in shape.fanout:
+        hops.append(hops[-1] * f)
+    n_sub = _pad(sum(hops))
+    m_sub = _pad(sum(hops[i + 1] for i in range(len(shape.fanout))))
+    return n_sub, m_sub
+
+
+def _gnn_cell(cfg: GNNConfig, shape, ctx: ShardingCtx, opt_cfg: OptConfig):
+    if shape.kind in ("full_graph", "minibatch"):
+        if shape.kind == "full_graph":
+            n, m, batch_sds, batch_log = _gnn_batch_full(shape)
+        else:
+            n, m = _gnn_subgraph_sizes(shape)
+            batch_sds = {"feats": sds((n, shape.d_feat), jnp.float32),
+                         "src": sds((m,), jnp.int32),
+                         "dst": sds((m,), jnp.int32),
+                         "labels": sds((n,), jnp.int32)}
+            batch_log = {"feats": ("nodes", None), "src": ("edges",),
+                         "dst": ("edges",), "labels": ("nodes",)}
+
+        p_sds = jax.eval_shape(
+            lambda: gnn_mod.init_params(cfg, jax.random.PRNGKey(0),
+                                        shape.d_feat, shape.n_classes))
+        p_log = gnn_mod.param_logical_axes_tree(p_sds)
+        state_sds = {"params": p_sds, "opt": jax.eval_shape(adamw_init, p_sds)}
+        state_log = {"params": p_log,
+                     "opt": {"m": p_log, "v": p_log, "step": ()}}
+
+        def step(state, batch):
+            def loss_fn(p):
+                logits = gnn_mod.forward_full(cfg, p, batch["feats"],
+                                              batch["src"], batch["dst"],
+                                              n, ctx)
+                labels = batch["labels"]
+                mask = (labels >= 0).astype(jnp.float32)
+                lab = jnp.maximum(labels, 0)
+                logits = logits.astype(jnp.float32)
+                lse = jax.nn.logsumexp(logits, axis=-1)
+                ll = jnp.take_along_axis(logits, lab[:, None], 1)[:, 0]
+                return jnp.sum((lse - ll) * mask) / jnp.maximum(mask.sum(), 1)
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+            new_p, new_opt, metrics = adamw_update(
+                opt_cfg, state["params"], grads, state["opt"])
+            metrics["loss"] = loss
+            return {"params": new_p, "opt": new_opt}, metrics
+
+        # 3x fwd-cost (fwd+bwd); per layer: edge msgs (m*d) + dense (n*d*d)
+        d = cfg.d_hidden
+        flops_fn = lambda: 3 * cfg.n_layers * (2 * m * d + 2 * n * d * d) \
+            + 3 * 2 * n * shape.d_feat * d
+        return step, state_sds, state_log, batch_sds, batch_log, flops_fn
+
+    if shape.kind == "dense_batch":
+        B, N = shape.batch_graphs, shape.nodes_per_graph
+        p_sds = jax.eval_shape(
+            lambda: gnn_mod.init_params(cfg, jax.random.PRNGKey(0),
+                                        shape.d_feat, shape.n_classes))
+        p_log = gnn_mod.param_logical_axes_tree(p_sds)
+        state_sds = {"params": p_sds, "opt": jax.eval_shape(adamw_init, p_sds)}
+        state_log = {"params": p_log,
+                     "opt": {"m": p_log, "v": p_log, "step": ()}}
+        batch_sds = {"adj": sds((B, N, N), jnp.float32),
+                     "feats": sds((B, N, shape.d_feat), jnp.float32),
+                     "labels": sds((B,), jnp.int32)}
+        batch_log = {"adj": ("batch", None, None),
+                     "feats": ("batch", None, None), "labels": ("batch",)}
+
+        def step(state, batch):
+            def loss_fn(p):
+                logits = gnn_mod.forward_dense(cfg, p, batch["adj"],
+                                               batch["feats"], ctx,
+                                               use_pallas=False)
+                from .common import cross_entropy
+                return cross_entropy(logits, batch["labels"])
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+            new_p, new_opt, metrics = adamw_update(
+                opt_cfg, state["params"], grads, state["opt"])
+            metrics["loss"] = loss
+            return {"params": new_p, "opt": new_opt}, metrics
+
+        d = cfg.d_hidden
+        flops_fn = lambda: 3 * cfg.n_layers * B * (2 * N * N * d + 2 * N * d * d)
+        return step, state_sds, state_log, batch_sds, batch_log, flops_fn
+    raise ValueError(shape.kind)
+
+
+# --------------------------------------------------------------- recsys ----
+
+def _recsys_cell(cfg: RecsysConfig, shape, ctx: ShardingCtx,
+                 opt_cfg: OptConfig):
+    D, K, Lh = cfg.embed_dim, cfg.n_interests, cfg.hist_len
+    p_sds = jax.eval_shape(lambda: rec_mod.init_params(cfg, jax.random.PRNGKey(0)))
+    p_log = rec_mod.param_logical_axes(cfg)
+
+    if shape.kind == "train":
+        B = shape.batch
+        state_sds = {"params": p_sds, "opt": jax.eval_shape(adamw_init, p_sds)}
+        state_log = {"params": p_log,
+                     "opt": {"m": p_log, "v": p_log, "step": ()}}
+        batch_sds = {"hist_ids": sds((B, Lh), jnp.int32),
+                     "hist_mask": sds((B, Lh), jnp.float32),
+                     "target": sds((B,), jnp.int32),
+                     "negatives": sds((B, cfg.n_negatives), jnp.int32)}
+        batch_log = {"hist_ids": ("batch", None), "hist_mask": ("batch", None),
+                     "target": ("batch",), "negatives": ("batch", None)}
+
+        def step(state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: rec_mod.train_loss(cfg, p, batch, ctx))(state["params"])
+            new_p, new_opt, metrics = adamw_update(
+                opt_cfg, state["params"], grads, state["opt"])
+            metrics["loss"] = loss
+            return {"params": new_p, "opt": new_opt}, metrics
+
+        flops_fn = lambda: 3 * shape.batch * (
+            2 * Lh * D * D + cfg.capsule_iters * 4 * K * Lh * D
+            + 2 * (1 + cfg.n_negatives) * D)
+        return step, state_sds, state_log, batch_sds, batch_log, flops_fn
+
+    if shape.kind == "serve":
+        B = shape.batch
+        state_sds = {"params": p_sds}
+        state_log = {"params": p_log}
+        batch_sds = {"hist_ids": sds((B, Lh), jnp.int32),
+                     "hist_mask": sds((B, Lh), jnp.float32)}
+        batch_log = {"hist_ids": ("batch", None), "hist_mask": ("batch", None)}
+
+        def step(state, batch):
+            caps = rec_mod.serve_interests(cfg, state["params"],
+                                           batch["hist_ids"],
+                                           batch["hist_mask"], ctx)
+            return state, caps
+
+        flops_fn = lambda: shape.batch * (
+            2 * Lh * D * D + cfg.capsule_iters * 4 * K * Lh * D)
+        return step, state_sds, state_log, batch_sds, batch_log, flops_fn
+
+    if shape.kind == "retrieval":
+        C = _pad(shape.n_candidates)
+        state_sds = {"params": p_sds}
+        state_log = {"params": p_log}
+        batch_sds = {"hist_ids": sds((1, Lh), jnp.int32),
+                     "hist_mask": sds((1, Lh), jnp.float32),
+                     "cand_ids": sds((C,), jnp.int32)}
+        batch_log = {"hist_ids": (None, None), "hist_mask": (None, None),
+                     "cand_ids": ("query",)}
+
+        def step(state, batch):
+            caps = rec_mod.serve_interests(cfg, state["params"],
+                                           batch["hist_ids"],
+                                           batch["hist_mask"], ctx)
+            scores = rec_mod.retrieval_scores(cfg, state["params"], caps[0],
+                                              batch["cand_ids"], ctx,
+                                              use_pallas=False)
+            return state, scores
+
+        flops_fn = lambda: 2 * C * D * K
+        return step, state_sds, state_log, batch_sds, batch_log, flops_fn
+    raise ValueError(shape.kind)
+
+
+# -------------------------------------------------------------- ferrari ----
+
+def _ferrari_cell(cfg: FerrariServeConfig, shape, ctx: ShardingCtx,
+                  opt_cfg: OptConfig):
+    from ..kernels import ops as kops
+    n, K, W = cfg.n_nodes, cfg.k_max, cfg.seed_words
+    # gather-fused layout (§Perf iteration F1): slab [n, 2K] (begins with
+    # exact flags in sign bits, then ends) + meta [n, 4] (pi|blevel<<24,
+    # s+, s-). 84 B/node vs the naive 116 B and 3 gathers/query vs 12.
+    state_sds = {
+        "slab": sds((n, 2 * K), jnp.int32),
+        "meta": sds((n, 4), jnp.int32),
+    }
+    ixl = ("index_nodes", None)
+    state_log = {"slab": ixl, "meta": ixl}
+    Q = _pad(shape.n_queries)
+    batch_sds = {"cs": sds((Q,), jnp.int32), "ct": sds((Q,), jnp.int32)}
+    batch_log = {"cs": ("query",), "ct": ("query",)}
+
+    sharded = (getattr(cfg, "index_placement", "replicated") == "sharded"
+               and ctx.mesh is not None and "model" in ctx.mesh.shape
+               and n % ctx.mesh.shape["model"] == 0)
+    if sharded:
+        # rows over 'model' (16x capacity + 16x less HBM touched per step;
+        # §Perf F2) — the state shardings must match the shard_map specs
+        ctx = ShardingCtx(ctx.mesh, {**(ctx.rules or {}),
+                                     "index_nodes": "model"})
+
+    def step(state, batch):
+        if sharded:
+            from ..core.distributed import classify_sharded
+            verdict = classify_sharded(ctx.mesh, state, batch["cs"],
+                                       batch["ct"], use_pallas=False)
+        else:
+            verdict = kops.classify_queries(state, batch["cs"], batch["ct"],
+                                            use_pallas=False)
+        return state, verdict
+
+    # ~54 int/cmp ops per query lane over the K-slab + filters
+    flops_fn = lambda: Q * (6 * cfg.k_max + 16)
+    return step, state_sds, state_log, batch_sds, batch_log, flops_fn
+
+
+# ------------------------------------------------------------------ build --
+
+def build_cell(cfg, shape_name: str, mesh=None, rules=None,
+               opt_cfg: Optional[OptConfig] = None,
+               analysis: bool = False, shape_override=None) -> CellSpec:
+    shape = shape_override or shapes_for_family(cfg.family)[shape_name]
+    if (cfg.family == "lm" and cfg.moe is not None
+            and shape.kind == "decode"):
+        # MoE DECODE is weight-capacity-bound (42B params, G ≤ 128 tokens):
+        # 2D-shard expert FFNs (experts→model × mlp→data, FSDP-style) so the
+        # full expert stack fits per-chip HBM. (Prefill has G ~ 10^6 tokens
+        # and keeps plain EP — §Perf iteration 2.)
+        rules = {**(rules or {}), "mlp": "data"}
+    ctx = ShardingCtx(mesh, rules)
+    opt_cfg = opt_cfg or OptConfig()
+    fam = {"lm": _lm_cell, "gnn": _gnn_cell, "recsys": _recsys_cell,
+           "ferrari": _ferrari_cell}[cfg.family]
+    if cfg.family == "lm":
+        step, state_sds, state_log, batch_sds, batch_log, flops_fn = fam(
+            cfg, shape, ctx, opt_cfg, analysis=analysis)
+    else:
+        # non-LM families have no scans: production form is already trip-true
+        step, state_sds, state_log, batch_sds, batch_log, flops_fn = fam(
+            cfg, shape, ctx, opt_cfg)
+    return CellSpec(arch=cfg.arch_id, shape_name=shape_name, kind=shape.kind,
+                    shape=shape,
+                    step=step, state_sds=state_sds, batch_sds=batch_sds,
+                    state_logical=state_log, batch_logical=batch_log,
+                    ctx=ctx, model_flops_fn=flops_fn)
+
+
+def materialize_state(cell: CellSpec, cfg, shape_name: str, key):
+    """Real (allocated) state for smoke tests / examples — small configs only."""
+    shape = cell.shape or shapes_for_family(cfg.family)[shape_name]
+    if cfg.family == "lm":
+        state = {"params": tf_mod.init_params(cfg, key)}
+        if "opt" in cell.state_sds:
+            state["opt"] = adamw_init(state["params"])
+        if "cache" in cell.state_sds:
+            state["cache"] = tf_mod.init_cache(cfg, shape.batch, shape.seq_len)
+        return state
+    if cfg.family == "gnn":
+        p = gnn_mod.init_params(cfg, key, shape.d_feat, shape.n_classes)
+        return {"params": p, "opt": adamw_init(p)}
+    if cfg.family == "recsys":
+        p = rec_mod.init_params(cfg, key)
+        state = {"params": p}
+        if "opt" in cell.state_sds:
+            state["opt"] = adamw_init(p)
+        return state
+    if cfg.family == "ferrari":
+        raise ValueError("use core.packed.PackedIndex for real ferrari state")
+    raise ValueError(cfg.family)

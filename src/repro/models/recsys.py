@@ -1,0 +1,99 @@
+"""MIND: Multi-Interest Network with Dynamic routing (recsys arch).
+
+Item embedding table (row-sharded over the model axis — the classic recsys
+table sharding) → behavior-to-interest (B2I) capsule routing with a shared
+bilinear map (capsule_iters=3) → label-aware attention (train) or
+max-interest retrieval scoring (serve). EmbeddingBag-style lookups are
+``jnp.take`` + segment ops (kernels.ops.embedding_bag is the general form).
+
+Shapes: train_batch B=65536; serve 512/262144; retrieval_cand scores one
+user against 10^6 candidates through the retrieval_score Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import RecsysConfig
+from ..kernels import ops
+from ..parallel.sharding import NO_SHARDING, ShardingCtx
+from .common import normal_init
+
+
+def init_params(cfg: RecsysConfig, key):
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    D = cfg.embed_dim
+    return {
+        "table": normal_init(k1, (cfg.n_items, D), D ** -0.5, dt),
+        "bilinear": normal_init(k2, (D, D), D ** -0.5, dt),
+        "cap_bias": normal_init(k3, (cfg.n_interests, 1), 1.0, jnp.float32),
+    }
+
+
+def param_logical_axes(cfg: RecsysConfig):
+    return {
+        "table": ("table_rows", None),
+        "bilinear": (None, None),
+        "cap_bias": ("capsule", None),
+    }
+
+
+def interests(cfg: RecsysConfig, params, hist_ids, hist_mask,
+              ctx: ShardingCtx = NO_SHARDING):
+    """B2I dynamic routing. hist_ids [B, L] int32, hist_mask [B, L] f32.
+    Returns interest capsules [B, K, D]."""
+    B, L = hist_ids.shape
+    D, K = cfg.embed_dim, cfg.n_interests
+    e = jnp.take(params["table"], hist_ids, axis=0)          # [B, L, D]
+    e = ctx.constrain(e, ("batch", None, None))
+    se = jnp.einsum("bld,de->ble", e, params["bilinear"])    # shared map
+    # routing logits [B, K, L]
+    b_r = jnp.broadcast_to(params["cap_bias"][None], (B, K, L)).astype(jnp.float32)
+    neg = (1.0 - hist_mask)[:, None, :] * -1e30
+
+    def squash(v):
+        n2 = jnp.sum(jnp.square(v), axis=-1, keepdims=True)
+        return (n2 / (1.0 + n2)) * v * jax.lax.rsqrt(n2 + 1e-9)
+
+    caps = None
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(b_r + neg, axis=1)                # over capsules
+        caps = squash(jnp.einsum("bkl,ble->bke",
+                                 w * hist_mask[:, None, :], se))
+        b_r = b_r + jnp.einsum("bke,ble->bkl", caps, se)
+    return caps                                              # [B, K, D]
+
+
+def label_aware_user_vec(caps, target_e, p: float = 2.0):
+    """Label-aware attention (train): attend interests by target affinity^p."""
+    att = jnp.einsum("bkd,bd->bk", caps, target_e)
+    att = jax.nn.softmax(jnp.power(jnp.maximum(att, 1e-9), p), axis=1)
+    return jnp.einsum("bk,bkd->bd", att, caps)
+
+
+def train_loss(cfg: RecsysConfig, params, batch,
+               ctx: ShardingCtx = NO_SHARDING):
+    """Sampled-softmax loss: positive target vs n_negatives uniform ids."""
+    caps = interests(cfg, params, batch["hist_ids"], batch["hist_mask"], ctx)
+    pos_e = jnp.take(params["table"], batch["target"], axis=0)   # [B, D]
+    neg_e = jnp.take(params["table"], batch["negatives"], axis=0)  # [B, Nn, D]
+    user = label_aware_user_vec(caps, pos_e)                     # [B, D]
+    pos_s = jnp.einsum("bd,bd->b", user, pos_e)
+    neg_s = jnp.einsum("bd,bnd->bn", user, neg_e)
+    logits = jnp.concatenate([pos_s[:, None], neg_s], axis=1).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=1)
+    return jnp.mean(lse - logits[:, 0])
+
+
+def serve_interests(cfg: RecsysConfig, params, hist_ids, hist_mask,
+                    ctx: ShardingCtx = NO_SHARDING):
+    return interests(cfg, params, hist_ids, hist_mask, ctx)
+
+
+def retrieval_scores(cfg: RecsysConfig, params, caps, cand_ids,
+                     ctx: ShardingCtx = NO_SHARDING, use_pallas: bool = True):
+    """Score candidate items for ONE user: caps [K, D], cand_ids [C]."""
+    cand_e = jnp.take(params["table"], cand_ids, axis=0)     # [C, D]
+    cand_e = ctx.constrain(cand_e, ("query", None))
+    return ops.retrieval_score(cand_e, caps, use_pallas=use_pallas)

@@ -1,0 +1,579 @@
+"""Decoder-only LM (llama-family): dense and MoE variants, GQA, RoPE.
+
+Layer parameters are stacked on a leading ``layers`` axis and consumed with
+``jax.lax.scan`` — one layer body in the HLO regardless of depth (compile
+time and HLO size stay small for the 512-device dry-run). Activation
+rematerialization wraps the scanned body when ``cfg.remat``.
+
+Sharding: logical axes resolved through parallel.sharding rules —
+  embed/lm_head: vocab→model ;  attention: heads→model (divisibility
+  fallback replicates, e.g. smollm's 15 heads) ;  FFN: mlp→model ;
+  MoE: experts→model (EP), expert capacity→data ;  batch→(pod, data) ;
+  decode KV cache: kv_seq→model (SP — flash-decoding emerges from SPMD).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import LMConfig
+from ..parallel.sharding import NO_SHARDING, ShardingCtx
+from .attention import chunked_attention, decode_attention
+from .common import apply_rope, cross_entropy, normal_init, rms_norm
+
+# ----------------------------------------------------------------- params --
+
+def param_logical_axes(cfg: LMConfig):
+    lay = {
+        "attn_norm": ("layers", "embed"),
+        "mlp_norm": ("layers", "embed"),
+        "wq": ("layers", "embed", "heads"),
+        "wk": ("layers", "embed", "kv_heads"),
+        "wv": ("layers", "embed", "kv_heads"),
+        "wo": ("layers", "heads", "embed"),
+    }
+    if cfg.moe:
+        lay.update({
+            "router": ("layers", "embed", "experts"),
+            "w_gate": ("layers", "experts", "embed", "mlp"),
+            "w_up": ("layers", "experts", "embed", "mlp"),
+            "w_down": ("layers", "experts", "mlp", "embed"),
+        })
+    else:
+        lay.update({
+            "w_gate": ("layers", "embed", "mlp"),
+            "w_up": ("layers", "embed", "mlp"),
+            "w_down": ("layers", "mlp", "embed"),
+        })
+    tree = {"embed": ("vocab", "embed"), "final_norm": ("embed",),
+            "layers": lay}
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ("embed", "vocab")
+    return tree
+
+
+def init_params(cfg: LMConfig, key):
+    dt = jnp.dtype(cfg.dtype)
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.vocab
+    H, KV, hd, L = cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.n_layers
+    ks = jax.random.split(key, 12)
+    s_in = D ** -0.5
+    lay = {
+        "attn_norm": jnp.ones((L, D), dt),
+        "mlp_norm": jnp.ones((L, D), dt),
+        "wq": normal_init(ks[0], (L, D, H * hd), s_in, dt),
+        "wk": normal_init(ks[1], (L, D, KV * hd), s_in, dt),
+        "wv": normal_init(ks[2], (L, D, KV * hd), s_in, dt),
+        "wo": normal_init(ks[3], (L, H * hd, D), (H * hd) ** -0.5, dt),
+    }
+    if cfg.moe:
+        E = cfg.moe.n_experts
+        lay.update({
+            "router": normal_init(ks[4], (L, D, E), s_in, jnp.float32),
+            "w_gate": normal_init(ks[5], (L, E, D, F), s_in, dt),
+            "w_up": normal_init(ks[6], (L, E, D, F), s_in, dt),
+            "w_down": normal_init(ks[7], (L, E, F, D), F ** -0.5, dt),
+        })
+    else:
+        lay.update({
+            "w_gate": normal_init(ks[5], (L, D, F), s_in, dt),
+            "w_up": normal_init(ks[6], (L, D, F), s_in, dt),
+            "w_down": normal_init(ks[7], (L, F, D), F ** -0.5, dt),
+        })
+    params = {
+        "embed": normal_init(ks[8], (V, D), 1.0, dt),
+        "final_norm": jnp.ones((D,), dt),
+        "layers": lay,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(ks[9], (D, V), s_in, dt)
+    return params
+
+
+def abstract_params(cfg: LMConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ------------------------------------------------------------------ layers --
+
+def _moe_ffn(cfg: LMConfig, lp, x, ctx: ShardingCtx):
+    """MoE FFN dispatcher — impl selected by cfg.moe.impl (see MoESpec)."""
+    if cfg.moe.impl == "shard_map" and ctx.mesh is not None:
+        return _moe_ffn_shardmap(cfg, lp, x, ctx)
+    return _moe_ffn_gather(cfg, lp, x, ctx)
+
+
+def _expert_ffn_local(xf, router, wg, wu, wd, *, E, K, C, E_loc, e0, cap_dtype):
+    """Shared per-shard expert block: route local tokens, keep only the
+    E_loc experts starting at ``e0``, gather/compute/scatter locally.
+
+    xf: [G_loc, D] local tokens; wg/wu: [E_loc, D, F(_loc)];
+    wd: [E_loc, F(_loc), D]. Returns the partial combine [G_loc, D]
+    (sums contributions of THIS shard's experts only — caller psums).
+    """
+    Gl, D = xf.shape
+    logits = jnp.einsum("gd,de->ge", xf.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                      # [G_loc, K]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    flat_e = top_e.reshape(-1)
+    # rank within expert queue via stable argsort (the 'sort' dispatch)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=flat_e.dtype))
+    pos_sorted = (jnp.arange(Gl * K, dtype=jnp.int32)
+                  - starts[sorted_e].astype(jnp.int32))
+    pos = jnp.zeros(Gl * K, jnp.int32).at[order].set(pos_sorted)
+    rel = flat_e.astype(jnp.int32) - e0
+    keep = (rel >= 0) & (rel < E_loc) & (pos < C)
+    slot = jnp.where(keep, rel * C + pos, E_loc * C)            # drop→sentinel
+    token_of = jnp.zeros(E_loc * C + 1, jnp.int32).at[slot].set(
+        jnp.repeat(jnp.arange(Gl, dtype=jnp.int32), K), mode="drop")
+    gate_of = jnp.zeros(E_loc * C + 1, jnp.float32).at[slot].set(
+        top_p.reshape(-1), mode="drop")
+    token_tbl = token_of[:-1].reshape(E_loc, C)
+    gate_tbl = gate_of[:-1].reshape(E_loc, C)
+
+    ex_in = xf[token_tbl]                                       # local gather
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ex_in, wg)) \
+        * jnp.einsum("ecd,edf->ecf", ex_in, wu)
+    ex_out = jnp.einsum("ecf,efd->ecd", h, wd)
+    ex_out = ex_out * gate_tbl[..., None].astype(ex_out.dtype)
+    out = jax.ops.segment_sum(ex_out.reshape(E_loc * C, D).astype(cap_dtype),
+                              token_tbl.reshape(-1), num_segments=Gl)
+    return out
+
+
+def _moe_ffn_shardmap(cfg: LMConfig, lp, x, ctx: ShardingCtx):
+    """EP-local MoE (§Perf iteration 2). The baseline gather impl indexes
+    the GLOBAL token table, so SPMD replicates the full activation per layer
+    (profiled: 16 GiB all-gather + 16 GiB all-reduce per layer per chip on
+    phi3.5 prefill, and 54 TiB/chip of converts on the replicated tensor for
+    moonshot train). Here each model shard routes its LOCAL activation
+    replica to its OWN E/ep experts; the only collective is the combine —
+    one [G_loc, D] psum over 'model', same volume as a dense-TP FFN.
+
+    Two modes:
+      * tokens-sharded (train/prefill): batch split over (pod, data),
+        experts over 'model', expert mlp dim unsharded. Capacity is
+        per-(data-shard, expert) — exactly GShard's per-group semantics.
+      * tokens-replicated (decode: G ≤ a few hundred): tokens replicated,
+        experts over 'model' AND expert mlp dim over 'data' (weight-
+        capacity-bound serving); combine psums over both axes.
+    """
+    from jax.sharding import PartitionSpec as P
+    mesh = ctx.mesh
+    moe = cfg.moe
+    B, S, D = x.shape
+    G = B * S
+    E, K = moe.n_experts, moe.top_k
+    ep = mesh.shape.get("model", 1)
+    if E % ep != 0:
+        return _moe_ffn_gather(cfg, lp, x, ctx)
+    E_loc = E // ep
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp = 1
+    for a in dp_axes:
+        dp *= mesh.shape[a]
+    rules = ctx.rules or {}
+    f_over_data = rules.get("mlp") == "data" and "data" in mesh.shape
+    tokens_sharded = (not f_over_data) and B % max(dp, 1) == 0
+
+    router, wg, wu, wd = lp["router"], lp["w_gate"], lp["w_up"], lp["w_down"]
+    if tokens_sharded:
+        C = max(int(G // dp * K / E * moe.capacity_factor), 1)
+        in_specs = (P(dp_axes if dp > 1 else None, None, None),
+                    P(None, None), P("model", None, None),
+                    P("model", None, None), P("model", None, None))
+        out_specs = P(dp_axes if dp > 1 else None, None, None)
+        red_axes = ("model",)
+    else:
+        C = max(int(G * K / E * moe.capacity_factor), 1)
+        f_ax = "data" if f_over_data else None
+        in_specs = (P(None, None, None),
+                    P(None, None), P("model", None, f_ax),
+                    P("model", None, f_ax), P("model", f_ax, None))
+        out_specs = P(None, None, None)
+        red_axes = ("model", "data") if f_over_data else ("model",)
+
+    def kernel(xb, router, wg, wu, wd):
+        Bl, Sl, Dl = xb.shape
+        xf = xb.reshape(Bl * Sl, Dl)
+        e0 = jax.lax.axis_index("model").astype(jnp.int32) * E_loc
+        # combine + psum in the activation dtype: each element sums ≤ top_k
+        # expert contributions — bf16-safe, and halves both the combine
+        # boundary traffic and the psum collective bytes (§Perf iteration 6)
+        out = _expert_ffn_local(xf, router, wg, wu, wd, E=E, K=K, C=C,
+                                E_loc=E_loc, e0=e0, cap_dtype=xb.dtype)
+        out = jax.lax.psum(out, red_axes)
+        return out.reshape(Bl, Sl, Dl).astype(xb.dtype)
+
+    fn = jax.shard_map(kernel, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    return fn(x, router, wg, wu, wd)
+
+
+def _moe_ffn_gather(cfg: LMConfig, lp, x, ctx: ShardingCtx):
+    """Capacity-based top-k routing (sort-free scatter build of the
+    [E, C] token table), expert-parallel einsum, weighted combine.
+    BASELINE impl: the global-token-id gather/scatter breaks SPMD data
+    sharding (see _moe_ffn_shardmap)."""
+    moe = cfg.moe
+    B, S, D = x.shape
+    G = B * S
+    E, K = moe.n_experts, moe.top_k
+    C = max(int(G * K / E * moe.capacity_factor), 1)
+    xf = x.reshape(G, D)
+
+    logits = jnp.einsum("gd,de->ge", xf.astype(jnp.float32), lp["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)                     # [G, K]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    flat_e = top_e.reshape(-1)                                  # [G*K]
+    # position of each assignment within its expert's queue
+    if moe.dispatch == "sort":
+        # O(GK log GK) argsort ranking: sort by expert, rank within group,
+        # scatter ranks back. Replaces the cumsum formulation whose
+        # reduce-window lowering costs O((GK)^2) HLO flops (see §Perf).
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        starts = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=flat_e.dtype))
+        pos_sorted = (jnp.arange(G * K, dtype=jnp.int32)
+                      - starts[sorted_e].astype(jnp.int32))
+        pos = jnp.zeros(G * K, jnp.int32).at[order].set(pos_sorted)
+    else:  # 'cumsum' baseline
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)     # [G*K, E]
+        pos = (jnp.cumsum(onehot, axis=0) - onehot)[jnp.arange(G * K), flat_e]
+    keep = pos < C
+    slot = jnp.where(keep, flat_e * C + pos, E * C)             # drop → sentinel
+    token_of = jnp.zeros(E * C + 1, jnp.int32).at[slot].set(
+        jnp.repeat(jnp.arange(G, dtype=jnp.int32), K), mode="drop")
+    gate_of = jnp.zeros(E * C + 1, jnp.float32).at[slot].set(
+        top_p.reshape(-1), mode="drop")
+    token_tbl = token_of[:-1].reshape(E, C)
+    gate_tbl = gate_of[:-1].reshape(E, C)
+
+    ex_in = xf[token_tbl]                                       # [E, C, D]
+    ex_in = ctx.constrain(ex_in, ("experts", "expert_cap", "embed"))
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ex_in, lp["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", ex_in, lp["w_up"])
+    ex_out = jnp.einsum("ecf,efd->ecd", h, lp["w_down"])        # [E, C, D]
+    ex_out = ex_out * gate_tbl[..., None].astype(ex_out.dtype)
+    out = jax.ops.segment_sum(ex_out.reshape(E * C, D),
+                              token_tbl.reshape(-1), num_segments=G)
+    return out.reshape(B, S, D).astype(x.dtype)
+
+
+def _dense_ffn(lp, x):
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, lp["w_gate"])) \
+        * jnp.einsum("bsd,df->bsf", x, lp["w_up"])
+    return jnp.einsum("bsf,fd->bsd", h, lp["w_down"])
+
+
+def _expand_kv(cfg: LMConfig, q, k, v, ctx: ShardingCtx):
+    """Make train/prefill attention shardable over 'model' (§Perf it. 5+8).
+
+    Two indivisibility hazards, both profiled to full attention replication
+    (plus a 15x-oversized wo contraction; forcing a post-hoc reshard
+    instead triggers SPMD involuntary-full-remat — 65x collective
+    regression, §Perf it. 4, refuted):
+
+      * kv_heads indivisible (phi3.5: kv=8 on TP=16) -> expand k/v to H
+        full heads (O(B·S·H·hd) bytes — noise next to S² score traffic).
+      * n_heads itself indivisible (smollm: H=15 on TP=16) -> ZERO-PAD
+        q/k/v to the next multiple of the model width; the padded heads
+        produce garbage attention output that the caller SLICES OFF before
+        wo — sound, and 1/15 extra compute buys 16x sharding.
+
+    Decode keeps the grouped KV cache (expansion would multiply the cache —
+    the decode bottleneck). Returns (q', k', v', n_heads_out).
+    """
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    if ctx.mesh is None:
+        return q, k, v, H
+    ep = ctx.mesh.shape.get("model", 1)
+    hp = 0 if H % ep == 0 else -(-H // ep) * ep     # padded head count
+    need_expand = (H != KV) and (KV % ep != 0 or hp > 0)
+    if not need_expand and hp == 0:
+        return q, k, v, H                           # already divisible
+    if need_expand:
+        g = H // KV
+        k = jnp.repeat(k, g, axis=2)                # grouped kv -> H heads
+        v = jnp.repeat(v, g, axis=2)
+    if hp:
+        z = ((0, 0), (0, 0), (0, hp - k.shape[2]), (0, 0))
+        q = jnp.pad(q, z)
+        k = jnp.pad(k, z)
+        v = jnp.pad(v, z)
+    ax = ("batch", "seq", "heads", None)
+    return (ctx.constrain(q, ax), ctx.constrain(k, ax),
+            ctx.constrain(v, ax), hp or H)
+
+
+def _layer(cfg: LMConfig, lp, x, positions, ctx: ShardingCtx,
+           q_chunk: int, kv_chunk: int):
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dh->bsh", h, lp["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", h, lp["wk"]).reshape(B, S, KV, hd)
+    v = jnp.einsum("bsd,dh->bsh", h, lp["wv"]).reshape(B, S, KV, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    qa, ka, va, _ = _expand_kv(cfg, q, k, v, ctx)
+    att = chunked_attention(qa, ka, va, causal=True,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    att = att[:, :, :H]                  # drop zero-padded heads (sound)
+    att = jnp.einsum("bsh,hd->bsd", att.reshape(B, S, H * hd), lp["wo"])
+    x = x + ctx.constrain(att, ("batch", "seq", "embed"))
+    h2 = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    ffn = _moe_ffn(cfg, lp, h2, ctx) if cfg.moe else _dense_ffn(lp, h2)
+    return x + ctx.constrain(ffn, ("batch", "seq", "embed"))
+
+
+# ----------------------------------------------------------------- forward --
+
+def forward(cfg: LMConfig, params, tokens, ctx: ShardingCtx = NO_SHARDING,
+            q_chunk: int = 512, kv_chunk: int = 1024,
+            scan_layers: bool = True):
+    """tokens [B, S] -> final hidden states [B, S, D].
+
+    ``scan_layers=False`` unrolls the layer loop (analysis mode: XLA cost
+    analysis counts while bodies once, so the dry-run's roofline pass lowers
+    the unrolled form for trip-true FLOP counts)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = ctx.constrain(x, ("batch", "seq", "embed"))
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(x, lp):
+        y = _layer(cfg, lp, x, positions, ctx, q_chunk, kv_chunk)
+        return y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if scan_layers:
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    else:
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, _ = body(x, lp)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def logits_and_loss(cfg: LMConfig, params, tokens, labels,
+                    ctx: ShardingCtx = NO_SHARDING,
+                    loss_chunk: int = 16384, **fw):
+    """Chunked cross-entropy: the [tokens, vocab] logits are produced and
+    reduced chunk-by-chunk (never materializing B·S·V).
+    ``loss_chunk=None`` = one chunk (analysis mode)."""
+    hs = forward(cfg, params, tokens, ctx, **fw)
+    B, S, D = hs.shape
+    if loss_chunk is None:
+        loss_chunk = B * S
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    hf = hs.reshape(B * S, D)
+    lf = labels.reshape(B * S)
+    G = B * S
+    loss_chunk = min(loss_chunk, G)
+    nc = -(-G // loss_chunk)
+    gp = nc * loss_chunk
+    hf = jnp.pad(hf, ((0, gp - G), (0, 0)))
+    lf = jnp.pad(lf, (0, gp - G))
+    wmask = jnp.pad(jnp.ones(G, jnp.float32), (0, gp - G))
+
+    @jax.checkpoint
+    def chunk_loss(carry, blk):
+        # checkpointed: backward recomputes the [chunk, V] logits from the
+        # (small) hidden chunk instead of saving them — O(B·S·V) -> O(B·S·D)
+        h, l, w = blk
+        logits = jnp.einsum("td,dv->tv", h, head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, l[:, None], axis=1)[:, 0]
+        return carry + jnp.sum((lse - ll) * w), None
+
+    total, _ = jax.lax.scan(
+        chunk_loss, jnp.float32(0.0),
+        (hf.reshape(nc, loss_chunk, D), lf.reshape(nc, loss_chunk),
+         wmask.reshape(nc, loss_chunk)))
+    return total / G
+
+
+# ------------------------------------------------------------------ decode --
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int):
+    """KV cache. ``cfg.kv_cache_dtype == "int8"`` stores quantized keys and
+    values with per-(token, kv-head) f32 absmax scales — halving the decode
+    working set (the decode bottleneck; 1/64 scale overhead at hd=128). The
+    dequant multiplies ride the attention einsums (fused on TPU)."""
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    if getattr(cfg, "kv_cache_dtype", "auto") == "int8":
+        return {
+            "k": jnp.zeros((L, batch, max_seq, KV, hd), jnp.int8),
+            "v": jnp.zeros((L, batch, max_seq, KV, hd), jnp.int8),
+            "k_scale": jnp.zeros((L, batch, max_seq, KV), jnp.float32),
+            "v_scale": jnp.zeros((L, batch, max_seq, KV), jnp.float32),
+        }
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "k": jnp.zeros((L, batch, max_seq, KV, hd), dt),
+        "v": jnp.zeros((L, batch, max_seq, KV, hd), dt),
+    }
+
+
+def cache_logical_axes(cfg: LMConfig):
+    ax = ("layers", "batch", "kv_seq", "kv_heads", None)
+    out = {"k": ax, "v": ax}
+    if getattr(cfg, "kv_cache_dtype", "auto") == "int8":
+        sx = ("layers", "batch", "kv_seq", "kv_heads")
+        out["k_scale"] = sx
+        out["v_scale"] = sx
+    return out
+
+
+def _quantize_token(x):
+    """x [B, 1, KV, hd] -> (int8 values, f32 absmax scales [B, 1, KV])."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decode_step(cfg: LMConfig, params, cache, token, pos,
+                ctx: ShardingCtx = NO_SHARDING, scan_layers: bool = True):
+    """One decode step. token [B, 1] int32; pos [] int32 (current position).
+    Returns (logits [B, V], new_cache)."""
+    B = token.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    x = jnp.take(params["embed"], token, axis=0)     # [B, 1, D]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    quant = getattr(cfg, "kv_cache_dtype", "auto") == "int8"
+
+    def body(x, kc_all, vc_all, lp, li, scales):
+        """One layer. The FULL [L, ...] caches are threaded as the scan
+        CARRY and updated in place at layer ``li`` — scan xs/ys would hold
+        input AND stacked-output copies (2× a 1.65 TB cache for moonshot
+        decode_32k; observed 29 GiB/device). Carry + donation lets XLA alias
+        one buffer end-to-end."""
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dh->bsh", h, lp["wq"]).reshape(B, 1, H, hd)
+        k = jnp.einsum("bsd,dh->bsh", h, lp["wk"]).reshape(B, 1, KV, hd)
+        v = jnp.einsum("bsd,dh->bsh", h, lp["wv"]).reshape(B, 1, KV, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        if quant:
+            k_w, ks_w = _quantize_token(k)
+            v_w, vs_w = _quantize_token(v)
+        else:
+            k_w, v_w = k.astype(kc_all.dtype), v.astype(vc_all.dtype)
+        kc_all = jax.lax.dynamic_update_slice(
+            kc_all, k_w[None], (li, 0, pos, 0, 0))
+        vc_all = jax.lax.dynamic_update_slice(
+            vc_all, v_w[None], (li, 0, pos, 0, 0))
+        kc_all = ctx.constrain(kc_all,
+                               ("layers", "batch", "kv_seq", "kv_heads", None))
+        vc_all = ctx.constrain(vc_all,
+                               ("layers", "batch", "kv_seq", "kv_heads", None))
+        kc = jax.lax.dynamic_index_in_dim(kc_all, li, 0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vc_all, li, 0, keepdims=False)
+        if quant:
+            ks_all = jax.lax.dynamic_update_slice(
+                scales["k"], ks_w[None], (li, 0, pos, 0))
+            vs_all = jax.lax.dynamic_update_slice(
+                scales["v"], vs_w[None], (li, 0, pos, 0))
+            scales["k"], scales["v"] = ks_all, vs_all
+            ks = jax.lax.dynamic_index_in_dim(ks_all, li, 0, keepdims=False)
+            vs = jax.lax.dynamic_index_in_dim(vs_all, li, 0, keepdims=False)
+            att = decode_attention(q, kc, vc, pos, k_scale=ks, v_scale=vs)
+        else:
+            att = decode_attention(q, kc, vc, pos)
+        att = jnp.einsum("bsh,hd->bsd", att.reshape(B, 1, H * hd), lp["wo"])
+        x = x + att
+        h2 = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.moe:
+            ffn = _moe_ffn(cfg, lp, h2, ctx)
+        else:
+            ffn = _dense_ffn(lp, h2)
+        return x + ffn, kc_all, vc_all, scales
+
+    sc0 = ({"k": cache["k_scale"], "v": cache["v_scale"]} if quant else None)
+    if scan_layers:
+        def scan_body(carry, xs):
+            x, kc_all, vc_all, scales = carry
+            lp, li = xs
+            x, kc_all, vc_all, scales = body(x, kc_all, vc_all, lp, li,
+                                             scales)
+            return (x, kc_all, vc_all, scales), None
+        (x, nk, nv, nsc), _ = jax.lax.scan(
+            scan_body, (x, cache["k"], cache["v"], sc0),
+            (params["layers"], jnp.arange(cfg.n_layers, dtype=jnp.int32)))
+    else:
+        nk, nv, nsc = cache["k"], cache["v"], sc0
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, nk, nv, nsc = body(x, nk, nv, lp, jnp.int32(i), nsc)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+    new_cache = {"k": nk, "v": nv}
+    if quant:
+        new_cache["k_scale"] = nsc["k"]
+        new_cache["v_scale"] = nsc["v"]
+    return logits.astype(jnp.float32), new_cache
+
+
+def prefill(cfg: LMConfig, params, tokens, max_seq: int,
+            ctx: ShardingCtx = NO_SHARDING, scan_layers: bool = True, **fw):
+    """Process a full prompt, return (last-token logits [B, V], cache)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = ctx.constrain(x, ("batch", "seq", "embed"))
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q_chunk = fw.get("q_chunk", 512)
+    kv_chunk = fw.get("kv_chunk", 1024)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dh->bsh", h, lp["wq"]).reshape(B, S, H, hd)
+        k = jnp.einsum("bsd,dh->bsh", h, lp["wk"]).reshape(B, S, KV, hd)
+        v = jnp.einsum("bsd,dh->bsh", h, lp["wv"]).reshape(B, S, KV, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        qa, ka, va, _ = _expand_kv(cfg, q, k, v, ctx)
+        att = chunked_attention(qa, ka, va, causal=True,
+                                q_chunk=q_chunk, kv_chunk=kv_chunk)
+        att = att[:, :, :H]              # drop zero-padded heads (sound)
+        att = jnp.einsum("bsh,hd->bsd", att.reshape(B, S, H * hd), lp["wo"])
+        x = x + ctx.constrain(att, ("batch", "seq", "embed"))
+        h2 = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+        ffn = _moe_ffn(cfg, lp, h2, ctx) if cfg.moe else _dense_ffn(lp, h2)
+        kpad = jnp.zeros((B, max_seq - S, KV, hd), k.dtype)
+        kc = jnp.concatenate([k, kpad], axis=1)
+        vc = jnp.concatenate([v, kpad], axis=1)
+        kc = ctx.constrain(kc, ("batch", "kv_seq", "kv_heads", None))
+        vc = ctx.constrain(vc, ("batch", "kv_seq", "kv_heads", None))
+        return x + ctx.constrain(ffn, ("batch", "seq", "embed")), (kc, vc)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if scan_layers:
+        x, (kcs, vcs) = jax.lax.scan(body, x, params["layers"])
+    else:
+        ks_, vs_ = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (kc, vc) = body(x, lp)
+            ks_.append(kc)
+            vs_.append(vc)
+        kcs, vcs = jnp.stack(ks_), jnp.stack(vs_)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)[:, 0]
+    return logits.astype(jnp.float32), {"k": kcs, "v": vcs}

@@ -1,0 +1,1 @@
+from .optimizer import adamw_init, adamw_update, OptConfig, clip_by_global_norm  # noqa: F401

@@ -1,0 +1,70 @@
+"""GPipe-style pipeline parallelism over the 'pod' axis (optional PP mode).
+
+The multi-pod mesh's 'pod' axis defaults to data parallelism; this module
+provides the alternative: each pod holds HALF the layer stack, microbatches
+stream through with ``jax.lax.ppermute`` boundary handoffs inside
+``shard_map``. Schedule: GPipe fill-drain over M microbatches — bubble
+fraction (P-1)/(M+P-1), amortized by M=8 default.
+
+This is deliberately minimal-but-real: the dry-run compiles it for
+llama3-8b train_4k on the (2,16,16) mesh (see EXPERIMENTS.md §Dry-run) and
+tests exercise a 2-stage toy on a debug mesh. Inter-stage comm = one
+[B/mb, S, D] activation per microbatch per boundary, overlappable with the
+next microbatch's compute (XLA schedules ppermute async start/done).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def pipeline_forward(mesh: Mesh, stage_fn: Callable, n_stages: int,
+                     microbatches: int, axis: str = "pod"):
+    """Build fn(stage_params, x) running ``stage_fn(params_i, x)`` per stage.
+
+    stage_params: pytree with leading [n_stages] axis, sharded over ``axis``.
+    x: [B, ...] global batch, split into ``microbatches`` chunks.
+    Returns the final-stage output (replicated back over ``axis``).
+    """
+    assert mesh.shape[axis] == n_stages
+
+    def per_device(params_stage, x):
+        # params_stage: this device's stage slice (leading axis length 1)
+        params_stage = jax.tree.map(lambda a: a[0], params_stage)
+        stage_id = jax.lax.axis_index(axis)
+        mb = jnp.split(x, microbatches, axis=0)
+        n_ticks = microbatches + n_stages - 1
+        outs = []
+        carry = jnp.zeros_like(mb[0])
+        for t in range(n_ticks):
+            # stage s processes microbatch t-s at tick t (GPipe fill-drain)
+            mb_idx = t  # only meaningful on stage 0
+            inj = mb[mb_idx] if mb_idx < microbatches else jnp.zeros_like(mb[0])
+            x_in = jnp.where(stage_id == 0, inj, carry)
+            y = stage_fn(params_stage, x_in)
+            # hand off to the next stage ring-wise
+            carry = jax.lax.ppermute(
+                y, axis, [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            if t >= n_stages - 1:
+                outs.append(carry)  # output of last stage arrives at stage 0
+        out = jnp.concatenate(outs, axis=0)
+        # every device computed a copy of the stream; the valid one lives on
+        # stage 0 (ring handoff from the last stage) — broadcast it
+        out = jax.lax.psum(jnp.where(stage_id == 0, out, jnp.zeros_like(out)),
+                           axis)
+        return out
+
+    in_specs = (P(axis), P())
+    out_specs = P()
+    return shard_map(per_device, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
+def demo_stage_fn(params, x):
+    """Toy two-matmul stage for tests."""
+    return jnp.tanh(x @ params["w"]) @ params["w2"]

@@ -1,0 +1,114 @@
+"""Elastic scaling: re-mesh on device-count change + state resharding.
+
+On a real cluster the runtime learns the surviving device set from the
+coordinator after a node failure (or a resize request). This module owns the
+two decisions that follow:
+
+  1. ``plan_mesh(n_devices, ...)``      — the largest well-formed
+     (pod, data, model) mesh the survivors can form. Model-axis width is
+     preserved when possible (TP resharding moves every weight; DP resharding
+     only re-slices the batch and optimizer shards), then degraded.
+  2. ``reshard(state, old, new)``       — move a pytree from the old mesh's
+     shardings onto the new mesh (jax.device_put handles the collective
+     layout change; on a cluster this is the standard resharding transfer).
+
+The driver (launch/train.py) uses these after rollback: survivors →
+plan_mesh → build_cell(mesh=new) → reshard/restore → resume. Tests drive it
+with forced host devices and scripted failures.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def _largest_pow2_leq(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+def plan_mesh_shape(n_devices: int, prefer_model: int = 16,
+                    multi_pod: bool = False) -> Tuple[Tuple[int, ...],
+                                                      Tuple[str, ...]]:
+    """Largest usable mesh shape from ``n_devices`` survivors.
+
+    Keeps the model axis at ``prefer_model`` while the survivor count
+    allows a non-trivial data axis; otherwise halves the model axis until
+    it fits. Uses the largest power-of-two device count (ragged survivor
+    sets waste the remainder — the standard trade on real pods, where the
+    scheduler backfills later).
+    """
+    usable = _largest_pow2_leq(n_devices)
+    model = min(prefer_model, usable)
+    while model > 1 and usable // model < 1:
+        model //= 2
+    rest = usable // model
+    if multi_pod and rest >= 4:
+        return (2, rest // 2, model), ("pod", "data", "model")
+    return (rest, model), ("data", "model")
+
+
+def make_mesh_from_devices(devices: Sequence, shape: Tuple[int, ...],
+                           axes: Tuple[str, ...]) -> Mesh:
+    n = int(np.prod(shape))
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev, axes)
+
+
+@dataclass
+class ElasticMeshManager:
+    """Tracks the live device set and produces successive meshes.
+
+    ``exclude(devices)`` removes failed/straggler devices; ``current_mesh``
+    rebuilds the largest mesh over survivors. ``generation`` increments on
+    every re-mesh so checkpoints can record which mesh wrote them.
+    """
+    prefer_model: int = 16
+    multi_pod: bool = False
+    generation: int = 0
+    _dead: set = None
+    _devices: List = None
+
+    def __post_init__(self):
+        self._dead = set()
+        self._devices = list(jax.devices())
+
+    @property
+    def alive(self) -> List:
+        return [d for d in self._devices if d.id not in self._dead]
+
+    def exclude(self, device_ids: Sequence[int]):
+        self._dead.update(int(i) for i in device_ids)
+        self.generation += 1
+
+    def devices_of_worker(self, worker: int, n_workers: int) -> List[int]:
+        """Device ids hosted by ``worker`` (contiguous block assignment —
+        the standard TPU-pod host→chips mapping)."""
+        per = max(1, len(self._devices) // max(n_workers, 1))
+        return [d.id for d in self._devices[worker * per:(worker + 1) * per]]
+
+    def current_mesh(self) -> Optional[Mesh]:
+        alive = self.alive
+        if not alive:
+            return None
+        if len(alive) == 1:
+            return None                      # single device: no mesh needed
+        shape, axes = plan_mesh_shape(len(alive), self.prefer_model,
+                                      self.multi_pod)
+        return make_mesh_from_devices(alive, shape, axes)
+
+
+def reshard(tree, new_shardings):
+    """Move a state pytree onto new shardings (new mesh). jax.device_put
+    performs the cross-mesh layout change; host-side restore paths get the
+    same result by loading the checkpoint with the new shardings."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s) if s is not None else x,
+        tree, new_shardings,
+        is_leaf=lambda x: not isinstance(x, dict))

@@ -1,0 +1,10 @@
+import os
+import sys
+from pathlib import Path
+
+# tests must see ONE device (dry-run alone forces 512)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))

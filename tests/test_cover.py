@@ -1,0 +1,83 @@
+"""k-interval cover: DP optimality, greedy/topgap quality ordering."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cover as cov
+from repro.core import intervals as iv
+from test_intervals import make_random_set, set_elements
+
+
+def brute_force_optimal_cost(s, k):
+    """Enumerate all gap subsets of size <= k-1 (test sizes only)."""
+    from itertools import combinations
+    n = iv.size(s)
+    if n <= k:
+        return cov.cover_cost(s)
+    best = None
+    idx = range(n - 1)
+    for r in range(0, k):
+        for keep_idx in combinations(idx, r):
+            keep = np.zeros(n - 1, dtype=bool)
+            keep[list(keep_idx)] = True
+            c = cov.cover_cost(iv.merge_by_kept_gaps(s, keep))
+            best = c if best is None else min(best, c)
+    return best
+
+
+@given(st.integers(0, 2**31), st.integers(2, 9), st.integers(1, 5))
+@settings(max_examples=60, deadline=None)
+def test_dp_matches_brute_force(seed, n, k):
+    rng = np.random.default_rng(seed)
+    s = make_random_set(rng, n)
+    got = cov.cover_cost(cov.cover(s, k, "dp"))
+    want = brute_force_optimal_cost(s, k)
+    assert got == want, (iv.to_tuples(s), k, got, want)
+
+
+@given(st.integers(0, 2**31), st.integers(2, 30), st.integers(1, 6))
+@settings(max_examples=80, deadline=None)
+def test_cover_hierarchy_and_validity(seed, n, k):
+    rng = np.random.default_rng(seed)
+    s = make_random_set(rng, n)
+    elems = set_elements(s)
+    costs = {}
+    for method in ("dp", "greedy", "topgap"):
+        c = cov.cover(s, k, method)
+        iv.validate(c)
+        assert iv.size(c) <= k
+        assert elems <= set_elements(c), method
+        # exactness sound: exact cover intervals are original exact intervals
+        cb, ce, cx = c
+        origs = set(iv.to_tuples(s))
+        for i in range(cb.size):
+            if cx[i]:
+                assert (int(cb[i]), int(ce[i]), True) in origs
+        costs[method] = cov.cover_cost(c)
+    assert costs["dp"] <= costs["greedy"]
+    # greedy usually <= topgap, but not guaranteed — both must be >= dp
+    assert costs["dp"] <= costs["topgap"]
+
+
+def test_k1_is_single_span():
+    s = iv.make_set([1, 50], [5, 60], [True, True])
+    c = cov.cover(s, 1)
+    assert iv.to_tuples(c) == [(1, 60, False)]
+
+
+def test_k_geq_n_identity():
+    s = iv.make_set([1, 50], [5, 60], [True, False])
+    c = cov.cover(s, 5, "dp")
+    assert iv.to_tuples(c) == iv.to_tuples(s)
+
+
+def test_topgap_batch_matches_single():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        n = int(rng.integers(3, 12))
+        s = make_random_set(rng, n)
+        k = int(rng.integers(2, 6))
+        keep_single = cov._topgap_keep(s, k)
+        g = iv.gaps(s).astype(np.int64)
+        keep_batch = cov.topgap_keep_batch(
+            g[None, :], np.ones((1, g.size), bool), k)[0]
+        assert np.array_equal(keep_single, keep_batch)

@@ -1,0 +1,121 @@
+"""Interval algebra unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import intervals as iv
+
+
+def make_random_set(rng, n, exact_p=0.5, max_gap=20, max_len=12):
+    lens = rng.integers(1, max_len, size=n)
+    gaps = rng.integers(1, max_gap, size=n)
+    b = np.cumsum(gaps) + np.concatenate([[0], np.cumsum(lens)[:-1]])
+    e = b + lens - 1
+    x = rng.random(n) < exact_p
+    return iv.make_set(b, e, x)
+
+
+def set_elements(s, exact_only=False):
+    b, e, x = s
+    out = set()
+    for i in range(b.size):
+        if exact_only and not x[i]:
+            continue
+        out.update(range(int(b[i]), int(e[i]) + 1))
+    return out
+
+
+def test_single_and_contains():
+    s = iv.single(3, 7, True)
+    assert iv.contains(s, 3) == (True, True)
+    assert iv.contains(s, 7) == (True, True)
+    assert iv.contains(s, 8) == (False, False)
+    assert iv.contains(s, 2) == (False, False)
+
+
+def test_merge_subsumption_exact_over_approx():
+    a = iv.make_set([1], [10], [True])
+    b = iv.make_set([2], [5], [False])
+    m = iv.merge_two(a, b)
+    assert iv.to_tuples(m) == [(1, 10, True)]
+
+
+def test_merge_subsumption_approx_over_exact():
+    a = iv.make_set([1], [10], [False])
+    b = iv.make_set([2], [5], [True])
+    m = iv.merge_two(a, b)
+    assert iv.to_tuples(m) == [(1, 10, False)]
+
+
+def test_merge_extension_exact_by_approx_becomes_approx():
+    # paper footnote: exact extended by approximate -> one long approx range
+    a = iv.make_set([1], [5], [True])
+    b = iv.make_set([4], [9], [False])
+    m = iv.merge_two(a, b)
+    assert iv.to_tuples(m) == [(1, 9, False)]
+
+
+def test_merge_adjacent_same_type_merges():
+    a = iv.make_set([1], [3], [True])
+    b = iv.make_set([4], [6], [True])
+    assert iv.to_tuples(iv.merge_two(a, b)) == [(1, 6, True)]
+    a = iv.make_set([1], [3], [False])
+    b = iv.make_set([4], [6], [False])
+    assert iv.to_tuples(iv.merge_two(a, b)) == [(1, 6, False)]
+
+
+def test_merge_adjacent_mixed_type_kept_separate():
+    a = iv.make_set([1], [3], [True])
+    b = iv.make_set([4], [6], [False])
+    assert iv.to_tuples(iv.merge_two(a, b)) == [(1, 3, True), (4, 6, False)]
+
+
+def test_exact_tiling_stays_exact():
+    # two exacts that tile a range exactly
+    a = iv.make_set([1, 6], [5, 9], [True, True])
+    b = iv.make_set([3], [7], [True])
+    m = iv.merge_two(a, b)
+    assert iv.to_tuples(m) == [(1, 9, True)]
+
+
+def test_exact_hole_breaks_exactness():
+    a = iv.make_set([1], [3], [True])
+    b = iv.make_set([2], [9], [False])
+    c = iv.make_set([8], [9], [True])
+    m = iv.merge_many([a, b, c])
+    # hole in exact coverage at 4..7 -> approx
+    assert iv.to_tuples(m) == [(1, 9, False)]
+
+
+@given(st.integers(0, 2**31), st.integers(1, 40), st.integers(1, 40))
+@settings(max_examples=60, deadline=None)
+def test_merge_many_union_semantics(seed, n1, n2):
+    """Union covers exactly the union; exact elements only where sound."""
+    rng = np.random.default_rng(seed)
+    s1 = make_random_set(rng, n1)
+    s2 = make_random_set(rng, n2)
+    m = iv.merge_many([s1, s2])
+    iv.validate(m)
+    want = set_elements(s1) | set_elements(s2)
+    got = set_elements(m)
+    assert want <= got, "merge lost elements"
+    # soundness of exactness: every element of an exact merged interval must
+    # be covered by SOME exact input interval
+    exact_in = set_elements(s1, True) | set_elements(s2, True)
+    exact_out = set_elements(m, True)
+    assert exact_out <= exact_in | set(), \
+        "merge invented exact coverage"
+    # merged intervals may only bridge input gaps via overlap/adjacency —
+    # i.e. no new elements beyond the union EXCEPT none at all
+    assert got == want
+
+
+def test_gaps_and_merge_by_kept_gaps():
+    s = iv.make_set([1, 10, 20, 40], [5, 12, 30, 45],
+                    [True, False, True, True])
+    g = iv.gaps(s)
+    assert list(g) == [4, 7, 9]
+    m = iv.merge_by_kept_gaps(s, np.array([False, True, False]))
+    assert iv.to_tuples(m) == [(1, 12, False), (20, 45, False)]
+    m2 = iv.merge_by_kept_gaps(s, np.array([True, True, True]))
+    assert iv.to_tuples(m2) == iv.to_tuples(s)

@@ -1,0 +1,96 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.batched_mp import batched_mp
+from repro.kernels.interval_stab import interval_stab_classify
+from repro.kernels.retrieval_score import retrieval_score
+
+RNG = np.random.default_rng(0)
+
+
+def _stab_inputs(q, k, w):
+    tgt = RNG.integers(0, 1000, q).astype(np.int32)
+    tau_s = RNG.integers(0, 1000, q).astype(np.int32)
+    tau_t = RNG.integers(0, 1000, q).astype(np.int32)
+    lvl_s = RNG.integers(0, 50, q).astype(np.int32)
+    lvl_t = RNG.integers(0, 50, q).astype(np.int32)
+    b = np.sort(RNG.integers(0, 1000, (q, k)), axis=1).astype(np.int32)
+    e = (b + RNG.integers(0, 60, (q, k))).astype(np.int32)
+    x = RNG.integers(0, 2, (q, k)).astype(np.int32)
+    seeds = [RNG.integers(0, 2**32, (q, w), dtype=np.uint32)
+             for _ in range(4)]
+    return tuple(jnp.asarray(a)
+                 for a in (tgt, tau_s, tau_t, lvl_s, lvl_t, b, e, x, *seeds))
+
+
+@pytest.mark.parametrize("q,k,w,block_q", [
+    (64, 1, 1, 64), (100, 3, 1, 64), (1024, 8, 1, 256),
+    (777, 5, 2, 128), (4097, 2, 4, 1024), (1, 32, 1, 128),
+])
+def test_interval_stab_sweep(q, k, w, block_q):
+    args = _stab_inputs(q, k, w)
+    got = interval_stab_classify(*args, block_q=block_q, interpret=True)
+    want = ref.interval_stab_classify_ref(*args)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_interval_stab_all_verdicts_covered():
+    args = _stab_inputs(4096, 4, 1)
+    got = np.asarray(ref.interval_stab_classify_ref(*args))
+    assert set(np.unique(got)) <= {0, 1, 2}
+    assert (got == 0).any() and (got == 1).any()
+
+
+@pytest.mark.parametrize("b,n,f,h", [
+    (1, 8, 8, 8), (4, 16, 8, 12), (2, 32, 64, 16), (8, 30, 16, 2),
+])
+def test_batched_mp_sweep(b, n, f, h):
+    adj = (RNG.random((b, n, n)) < 0.3).astype(np.float32)
+    x = RNG.standard_normal((b, n, f)).astype(np.float32)
+    w = RNG.standard_normal((f, h)).astype(np.float32)
+    got = batched_mp(jnp.asarray(adj), jnp.asarray(x), jnp.asarray(w),
+                     interpret=True)
+    want = ref.batched_mp_ref(jnp.asarray(adj), jnp.asarray(x),
+                              jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("c,d,i,block_c", [
+    (100, 16, 4, 64), (5000, 64, 4, 2048), (2048, 32, 8, 512),
+    (1, 64, 4, 128),
+])
+def test_retrieval_score_sweep(c, d, i, block_c):
+    cands = RNG.standard_normal((c, d)).astype(np.float32)
+    ints = RNG.standard_normal((i, d)).astype(np.float32)
+    got = retrieval_score(jnp.asarray(cands), jnp.asarray(ints),
+                          block_c=block_c, interpret=True)
+    want = ref.retrieval_score_ref(jnp.asarray(cands), jnp.asarray(ints))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_segment_mp_modes():
+    x = jnp.asarray(RNG.standard_normal((20, 4)).astype(np.float32))
+    dst = jnp.asarray(RNG.integers(0, 6, 20))
+    for mode in ("sum", "mean", "max"):
+        out = ops.segment_mp(x, dst, 6, mode)
+        assert out.shape == (6, 4)
+        assert np.all(np.isfinite(out))
+    s = np.zeros((6, 4), np.float32)
+    np.add.at(s, np.asarray(dst), np.asarray(x))
+    np.testing.assert_allclose(np.asarray(ops.segment_mp(x, dst, 6, "sum")),
+                               s, rtol=1e-5)
+
+
+def test_embedding_bag():
+    table = jnp.asarray(RNG.standard_normal((50, 8)).astype(np.float32))
+    ids = jnp.asarray(RNG.integers(0, 50, 30))
+    bags = jnp.asarray(np.sort(RNG.integers(0, 5, 30)))
+    out = ops.embedding_bag(table, ids, bags, 5, mode="sum")
+    want = np.zeros((5, 8), np.float32)
+    np.add.at(want, np.asarray(bags), np.asarray(table)[np.asarray(ids)])
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5)

@@ -1,0 +1,69 @@
+"""AdamW + schedule + clipping unit/property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.optim.optimizer import (OptConfig, adamw_init, adamw_update,
+                                   clip_by_global_norm, schedule_lr)
+
+
+def test_adamw_first_step_matches_manual():
+    cfg = OptConfig(lr=1e-2, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                    grad_clip=1e9, warmup_steps=0, schedule="constant")
+    p = {"w": jnp.asarray([[1.0, -2.0]], jnp.float32)}
+    g = {"w": jnp.asarray([[0.5, 0.1]], jnp.float32)}
+    opt = adamw_init(p)
+    new_p, new_opt, metrics = adamw_update(cfg, p, g, opt)
+    # step 1: mhat = g, vhat = g^2 -> delta = g/|g| = sign(g)
+    want = np.asarray(p["w"]) - 1e-2 * np.sign(np.asarray(g["w"]))
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, rtol=1e-5)
+    assert int(new_opt["step"]) == 1
+
+
+def test_weight_decay_skips_1d_params():
+    cfg = OptConfig(lr=1e-2, weight_decay=0.5, grad_clip=1e9,
+                    warmup_steps=0, schedule="constant")
+    p = {"w": jnp.ones((2, 2)), "norm": jnp.ones((4,))}
+    g = jax.tree.map(jnp.zeros_like, p)
+    new_p, _, _ = adamw_update(cfg, p, g, adamw_init(p))
+    assert float(jnp.abs(new_p["w"] - 1.0).max()) > 1e-4    # decayed
+    np.testing.assert_allclose(np.asarray(new_p["norm"]), 1.0)  # untouched
+
+
+@given(norm=st.floats(0.1, 100.0), clip=st.floats(0.1, 10.0))
+@settings(max_examples=25, deadline=None)
+def test_clip_by_global_norm_property(norm, clip):
+    g = {"a": jnp.full((3, 3), norm / 3.0), "b": jnp.zeros(2)}
+    true_norm = float(jnp.sqrt(jnp.sum(jnp.square(g["a"]))))
+    clipped, gnorm = clip_by_global_norm(g, clip)
+    got_norm = float(jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                                  for x in jax.tree.leaves(clipped))))
+    assert got_norm <= max(clip, true_norm) * 1.001
+    np.testing.assert_allclose(float(gnorm), true_norm, rtol=1e-5)
+    if true_norm <= clip:
+        np.testing.assert_allclose(got_norm, true_norm, rtol=1e-5)
+
+
+def test_schedule_shapes():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                    schedule="cosine")
+    assert float(schedule_lr(cfg, jnp.int32(0))) == 0.0
+    np.testing.assert_allclose(float(schedule_lr(cfg, jnp.int32(10))), 1.0,
+                               rtol=1e-5)
+    assert float(schedule_lr(cfg, jnp.int32(100))) < 1e-6
+    mid = float(schedule_lr(cfg, jnp.int32(55)))
+    assert 0.4 < mid < 0.6
+
+
+def test_moments_are_f32_for_bf16_params():
+    p = {"w": jnp.ones((2, 2), jnp.bfloat16)}
+    opt = adamw_init(p)
+    assert opt["m"]["w"].dtype == jnp.float32
+    assert opt["v"]["w"].dtype == jnp.float32
+    g = {"w": jnp.full((2, 2), 0.1, jnp.bfloat16)}
+    cfg = OptConfig(warmup_steps=0, schedule="constant")
+    new_p, new_opt, _ = adamw_update(cfg, p, g, opt)
+    assert new_p["w"].dtype == jnp.bfloat16
+    assert new_opt["v"]["w"].dtype == jnp.float32

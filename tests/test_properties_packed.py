@@ -1,0 +1,90 @@
+"""Property tests (hypothesis) for the fused packed layout + soundness.
+
+Invariants:
+  * slab encode/decode roundtrip: begins and exact flags recover exactly
+    from the sign-bit encoding; meta word0 recovers π exactly and blevel
+    up to sound saturation.
+  * verdict soundness on arbitrary random DAGs: POS verdicts are truly
+    reachable, NEG truly unreachable (vs brute-force closure) — for both
+    the packed jnp oracle and the packed Pallas kernel (interpret mode).
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.ferrari import build_index
+from repro.core.packed import pack_index
+from repro.core.query import brute_force_closure
+from repro.graphs.generators import random_dag
+from repro.kernels import ref
+from repro.kernels.interval_stab import interval_stab_classify_packed
+
+
+@given(n=st.integers(20, 120), deg=st.floats(0.5, 3.0),
+       k=st.integers(1, 4), seed=st.integers(0, 10**6))
+@settings(max_examples=20, deadline=None)
+def test_packed_verdicts_sound_vs_brute_force(n, deg, k, seed):
+    g = random_dag(n, deg, seed=seed)
+    ix = build_index(g, k=k, variant="G", n_seeds=8)
+    p = pack_index(ix)
+    dev = p.to_device()
+    closure = brute_force_closure(ix.cond.dag)          # [n, n] bool
+
+    rng = np.random.default_rng(seed)
+    q = 128
+    cs = rng.integers(0, p.n, q).astype(np.int32)
+    ct = rng.integers(0, p.n, q).astype(np.int32)
+    truth = closure[cs, ct]
+
+    v = np.asarray(ref.interval_stab_classify_packed_ref(
+        jnp.asarray(dev["meta"][cs]), jnp.asarray(dev["meta"][ct]),
+        jnp.asarray(dev["slab"][cs])))
+    # same-node queries are resolved upstream (ops applies cs == ct): drop
+    mask = cs != ct
+    assert truth[(v == ref.POS) & mask].all()
+    assert (~truth[(v == ref.NEG) & mask]).all()
+
+    vk = np.asarray(interval_stab_classify_packed(
+        jnp.asarray(dev["meta"][cs]), jnp.asarray(dev["meta"][ct]),
+        jnp.asarray(dev["slab"][cs]), block_q=64, interpret=True))
+    np.testing.assert_array_equal(v, vk)
+
+
+@given(seed=st.integers(0, 10**6), k=st.integers(1, 3))
+@settings(max_examples=15, deadline=None)
+def test_fused_layout_roundtrip(seed, k):
+    g = random_dag(80, 2.0, seed=seed)
+    ix = build_index(g, k=k, variant="L", n_seeds=8)
+    p = pack_index(ix)
+    slab, meta = p.fused_layout()
+    kx = p.k_max
+    begins = slab[:, :kx] & np.int32(0x7FFFFFFF)
+    exact = (slab[:, :kx] < 0).astype(np.int32)
+    ends = slab[:, kx:]
+    np.testing.assert_array_equal(begins, p.begins & np.int32(0x7FFFFFFF))
+    np.testing.assert_array_equal(
+        begins[p.begins < 2**31 - 1], p.begins[p.begins < 2**31 - 1])
+    np.testing.assert_array_equal(exact, p.exact)
+    np.testing.assert_array_equal(ends, p.ends)
+    pi = meta[:, 0] & np.int32(0xFFFFFF)
+    lvl = (meta[:, 0] >> 24) & np.int32(0xFF)
+    np.testing.assert_array_equal(pi, p.pi)
+    np.testing.assert_array_equal(lvl, np.minimum(p.blevel, 255))
+    np.testing.assert_array_equal(meta[:, 1], p.tau)
+
+
+def test_saturated_levels_never_create_false_negatives():
+    """Force blevel saturation by clamping to tiny widths and verify the
+    suppressed filter can only weaken pruning, never flip a verdict to an
+    unsound NEG (deep-chain graph: levels exceed 255 is impractical to
+    build here, so we check the suppression branch directly)."""
+    w0 = np.array([[255 << 24 | 5, 1, 0, 0],
+                   [255 << 24 | 3, 2, 0, 0]], np.uint32).view(np.int32)
+    meta_s = jnp.asarray(w0[:1])                                  # saturated
+    meta_t = jnp.asarray(w0[1:])                                  # saturated
+    slab = jnp.asarray([[3, 3]], jnp.int32)    # one interval [3, 3] approx
+    v = ref.interval_stab_classify_packed_ref(meta_s, meta_t, slab)
+    # π(t)=3 inside the approximate interval; τ filter passes (1 < 2);
+    # the SATURATED level filter must NOT fire -> UNKNOWN (expand), not NEG
+    assert int(v[0]) == ref.UNKNOWN

@@ -1,0 +1,94 @@
+"""SCC condensation + tree cover / post-order invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scc import condense, is_dag
+from repro.core.tree_cover import (backward_levels, build_tree_labels,
+                                   post_order, topological_order, tree_cover)
+from repro.graphs.csr import build_csr
+from repro.graphs.generators import (random_dag, scale_free_digraph,
+                                     small_example_graph)
+
+
+def test_condense_simple_cycle():
+    # 0 -> 1 -> 2 -> 0, 2 -> 3
+    g = build_csr(4, [0, 1, 2, 2], [1, 2, 0, 3])
+    c = condense(g)
+    assert c.n_comp == 2
+    assert c.comp[0] == c.comp[1] == c.comp[2]
+    assert c.comp[3] != c.comp[0]
+    assert is_dag(c.dag)
+    # topological id order: component of {0,1,2} precedes component of {3}
+    assert c.comp[0] < c.comp[3]
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=25, deadline=None)
+def test_condense_produces_dag_with_equivalent_reachability(seed):
+    g = scale_free_digraph(120, 2.5, seed=seed)
+    c = condense(g)
+    assert is_dag(c.dag)
+    # edges map into the condensed graph
+    src, dst = g.edges()
+    csrc, cdst = c.comp[src], c.comp[dst]
+    dag_edges = set(zip(*c.dag.edges()))
+    for s, d in zip(csrc, cdst):
+        if s != d:
+            assert (int(s), int(d)) in dag_edges
+    # comp ids are a topological order of the DAG
+    for s, d in dag_edges:
+        assert s < d
+
+
+def test_topological_order_is_valid():
+    g = random_dag(200, 3.0, seed=1)
+    tau = topological_order(g)
+    src, dst = g.edges()
+    assert np.all(tau[src] < tau[dst])
+    assert sorted(tau) == list(range(1, g.n + 1))
+
+
+def test_backward_levels_rule():
+    g = random_dag(150, 2.0, seed=2)
+    tau = topological_order(g)
+    lv = backward_levels(g, tau)
+    src, dst = g.edges()
+    assert np.all(lv[src] > lv[dst])
+
+
+def test_tree_cover_parent_is_max_tau_predecessor():
+    g = random_dag(100, 2.5, seed=3)
+    tau = topological_order(g)
+    parent = tree_cover(g, tau)
+    src, dst = g.edges()
+    for v in range(g.n):
+        preds = src[dst == v]
+        if preds.size == 0:
+            assert parent[v] == g.n  # virtual root
+        else:
+            assert parent[v] == preds[np.argmax(tau[preds])]
+
+
+def test_post_order_subtree_contiguity():
+    g = random_dag(200, 2.0, seed=4)
+    tl = build_tree_labels(g)
+    n = g.n
+    # pi is a permutation of 1..n+1 and root is last
+    assert sorted(tl.pi) == list(range(1, n + 2))
+    assert tl.pi[n] == n + 1
+    # subtree ids form [tbegin, pi] and children are inside parent range
+    for v in range(n):
+        p = tl.parent[v]
+        assert tl.tbegin[p] <= tl.tbegin[v] <= tl.pi[v] <= tl.pi[p]
+
+
+def test_paper_example_tree_interval_of_root_subtree():
+    g = small_example_graph()
+    tl = build_tree_labels(g)
+    # the virtual root covers the whole range
+    assert tl.tbegin[g.n] == 1 and tl.pi[g.n] == g.n + 1
+    # tree reachability: pi(child) in I_T(parent)
+    for v in range(g.n):
+        p = tl.parent[v]
+        assert tl.tbegin[p] <= tl.pi[v] <= tl.pi[p]

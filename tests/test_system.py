@@ -1,0 +1,66 @@
+"""End-to-end behaviour tests for the paper's system."""
+import numpy as np
+import pytest
+
+from repro.core.ferrari import build_index
+from repro.core.query import QueryEngine, brute_force_closure
+from repro.core.query_jax import DeviceQueryEngine
+from repro.core.workload import positive_queries, random_queries
+from repro.graphs.generators import scale_free_digraph
+
+
+def test_end_to_end_reachability_serving():
+    """The paper's full pipeline: raw cyclic web-like graph → condensation →
+    FERRARI-G index under budget → batched device serving → correct answers
+    for random and positive workloads, with the advertised phase-1
+    resolution rate and budget compliance."""
+    g = scale_free_digraph(3000, 4.0, seed=42)
+    ix = build_index(g, k=2, variant="G")
+    n = ix.tl.n
+    assert ix.n_intervals() <= 2 * n + 1, "global budget violated"
+
+    tc = brute_force_closure(g)
+    dev = DeviceQueryEngine(ix)
+    qs, qt = random_queries(g, 4000, seed=1)
+    got = dev.answer(qs, qt)
+    want = np.array([tc[s, t] for s, t in zip(qs, qt)])
+    assert np.array_equal(got, want)
+
+    ps, pt = positive_queries(g, 1000, seed=2)
+    assert dev.answer(ps, pt).all()
+
+    resolved = dev.stats.phase1_pos + dev.stats.phase1_neg
+    assert resolved / dev.stats.n_queries > 0.9
+
+
+def test_index_size_scales_with_budget():
+    """Paper's central claim: budget k directly controls index size, and
+    larger budgets never hurt pruning (fewer or equal expansions)."""
+    g = scale_free_digraph(2000, 4.0, seed=7)
+    tc = brute_force_closure(g)
+    sizes, expands = [], []
+    qs, qt = random_queries(g, 2000, seed=3)
+    for k in (1, 2, 5):
+        ix = build_index(g, k=k, variant="L", use_seeds=False)
+        eng = QueryEngine(ix, use_seeds=False, use_filters=False)
+        got = eng.batch(qs, qt)
+        want = np.array([tc[s, t] for s, t in zip(qs, qt)])
+        assert np.array_equal(got, want)
+        sizes.append(ix.n_intervals())
+        expands.append(eng.stats.nodes_expanded)
+    assert sizes[0] <= sizes[1] <= sizes[2]
+    assert expands[2] <= expands[0]
+
+
+def test_reachability_service_feature():
+    """FERRARI as a framework feature: negative-pair filtering for GNN
+    training data."""
+    from repro.data.graph_data import ReachabilityService
+    g = scale_free_digraph(800, 3.0, seed=5)
+    svc = ReachabilityService(g, k=2)
+    rng = np.random.default_rng(0)
+    srcs = rng.integers(0, g.n, 500)
+    dsts = rng.integers(0, g.n, 500)
+    ns, nd = svc.filter_unreachable_pairs(srcs, dsts)
+    tc = brute_force_closure(g)
+    assert all(not tc[s, t] for s, t in zip(ns, nd))

@@ -1,0 +1,52 @@
+"""Device wavefront constructor ≡ host FERRARI-L(topgap); budget; queries."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import intervals as iv
+from repro.core.construction_jax import build_wavefront, labels_from_wavefront
+from repro.core.ferrari import build_index
+from repro.core.query import QueryEngine, brute_force_closure
+from repro.graphs.generators import layered_dag, random_dag, random_tree
+
+
+@given(st.integers(0, 2**31))
+@settings(max_examples=10, deadline=None)
+def test_wavefront_bit_identical_to_host(seed):
+    g = random_dag(250, 2.5, seed=seed)
+    host = build_index(g, k=2, variant="L", cover_method="topgap",
+                       use_seeds=False, precondensed=True)
+    wf = build_wavefront(g, k=2, variant="L")
+    wl = labels_from_wavefront(wf)
+    for v in range(g.n):
+        assert iv.to_tuples(host.labels[v]) == iv.to_tuples(wl[v]), v
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_wavefront_labels_answer_queries(k):
+    g = layered_dag(400, 15, 3.0, seed=2)
+    host = build_index(g, k=k, variant="L", cover_method="topgap",
+                       precondensed=True)
+    wf = build_wavefront(g, k=k, variant="L")
+    host.labels[: g.n] = labels_from_wavefront(wf)
+    tc = brute_force_closure(g)
+    eng = QueryEngine(host)
+    for s in range(0, 400, 11):
+        for t in range(0, 400, 13):
+            assert eng.reachable(s, t) == tc[s, t], (s, t)
+
+
+def test_wavefront_g_budget():
+    g = layered_dag(600, 20, 3.0, seed=3)
+    wf = build_wavefront(g, k=2, variant="G")
+    assert int(wf.counts[:-1].sum()) <= 2 * g.n + 1
+    # G allows wider labels than k but never wider than c*k
+    assert wf.counts[:-1].max() <= 8
+
+
+def test_wavefront_on_tree():
+    g = random_tree(300, seed=5)
+    wf = build_wavefront(g, k=2, variant="L")
+    # trees need exactly one exact interval per node
+    assert (wf.counts[:-1] == 1).all()
+    assert wf.exact[:-1, 0].all()
