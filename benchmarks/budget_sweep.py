@@ -19,7 +19,9 @@ def run(datasets=("pubmed-like", "citpatents-like", "webuk-like"),
             for k in ks:
                 with Timer() as tb:
                     ix = build_index(g, k=k, variant=variant)
-                dev = DeviceQueryEngine(ix, n_dense_max=0)
+                # CPU proxy; sparse device phase-2 is measured by
+                # query_perf.run_phase2_scale
+                dev = DeviceQueryEngine(ix, phase2_mode="host")
                 dev.answer(qs[:256], qt[:256])
                 with Timer() as tr:
                     dev.answer(qs, qt)

@@ -27,10 +27,10 @@ def _run_workload(name, g, kind, n_queries, k, d_grail):
         emit(f"query-{kind}/{name}/ferrari-{variant}-host",
              t.seconds / n_queries * 1e6,
              f"expand={host.stats.answered_expand}")
-        # device engine: phase-2 via host fallback (the dense-BFS phase-2 is
-        # a TPU path; emulating it on 1 CPU core would benchmark the
-        # emulator). Correctness of dense phase-2 is covered by tests.
-        dev = DeviceQueryEngine(ix, n_dense_max=0)
+        # device engine: phase-2 via host fallback (the device phase-2 paths
+        # are TPU paths; emulating them on 1 CPU core would benchmark the
+        # emulator). Device phase-2 is covered by tests + run_phase2_scale.
+        dev = DeviceQueryEngine(ix, phase2_mode="host")
         dev.answer(qs[:256], qt[:256])          # jit warmup
         with Timer() as t:
             r_dev = dev.answer(qs, qt)
@@ -68,6 +68,64 @@ def run(datasets=None, kind: str = "random", n_queries: int | None = None,
             for name in datasets}
 
 
+def run_phase2_scale(sizes=None, n_queries: int | None = None):
+    """Phase-2 residue throughput at n = 10^5-10^6 — the regime where the
+    old engine silently degraded to per-query host DFS. A deliberately weak
+    index (k=1, few seeds) maximizes the UNKNOWN residue so the sparse ELL
+    frontier engine, not phase 1, is what gets measured: the residue is
+    isolated with an untimed classify pass, and both the device engine and
+    the host guided DFS are timed on exactly that residue. Two graph
+    families per size: layered (deep, tail-free — pure ELL path) and
+    scale-free (the serve.py default — hub rows exercise the COO tail).
+    """
+    from repro.core.ferrari import build_index
+    from repro.core.query import QueryEngine
+    from repro.core.query_jax import DeviceQueryEngine, ServeStats
+    from repro.core.workload import positive_queries, random_queries
+    from repro.graphs.generators import layered_dag, scale_free_digraph
+    from repro.kernels import ops
+    sizes = sizes or ([100_000] if quick_mode() else [100_000, 1_000_000])
+    n_queries = n_queries or (2_000 if quick_mode() else 20_000)
+    out = {}
+    for n in sizes:
+        for fam, g in (("layered", layered_dag(n, 60, 3.0, seed=7)),
+                       ("scale-free", scale_free_digraph(n, 3.0, seed=7))):
+            ix = build_index(g, k=1, variant="L", n_seeds=64)
+            qs, qt = random_queries(g, n_queries, seed=1)
+            ps, pt = positive_queries(g, n_queries // 4, seed=2)
+            qs = np.concatenate([qs, ps])
+            qt = np.concatenate([qt, pt])
+            dev = DeviceQueryEngine(ix, phase2_mode="sparse")
+            # isolate the UNKNOWN residue (untimed) — phase-1 throughput
+            # has its own benchmark above; this one measures phase 2
+            v, _, _ = dev.classify(qs, qt)
+            unk = np.flatnonzero(np.asarray(v) == ops.UNKNOWN)
+            if unk.size == 0:
+                emit(f"phase2-scale/{fam}/n{n}/sparse-device", 0.0,
+                     "residue=0 (phase 1 resolved everything)")
+                continue
+            uq, ut = qs[unk], qt[unk]
+            dev.answer(uq[:256], ut[:256])           # jit warmup
+            dev.stats = ServeStats()                 # don't count warmup
+            with Timer() as t:
+                r_dev = dev.answer(uq, ut)
+            emit(f"phase2-scale/{fam}/n{n}/sparse-device",
+                 t.seconds / unk.size * 1e6,
+                 f"residue={unk.size};host={dev.stats.phase2_host};"
+                 f"retries={dev.stats.sparse_retries}")
+            host = QueryEngine(ix)
+            with Timer() as t:
+                r_host = host.batch(uq, ut)
+            emit(f"phase2-scale/{fam}/n{n}/host",
+                 t.seconds / unk.size * 1e6,
+                 f"residue={unk.size};expand={host.stats.answered_expand}")
+            assert np.array_equal(r_dev, r_host), "engines disagree!"
+            out[f"{fam}/n{n}"] = {"residue": int(unk.size),
+                                  "host_fallback": dev.stats.phase2_host}
+    return out
+
+
 if __name__ == "__main__":
     run(kind="random")
     run(kind="positive")
+    run_phase2_scale()

@@ -19,7 +19,9 @@ def run(sizes=None, avg_deg: float = 3.0, k: int = 2,
         g = scale_free_digraph(n, avg_deg, seed=77)
         with Timer() as tb:
             ix = build_index(g, k=k, variant="G")
-        dev = DeviceQueryEngine(ix, n_dense_max=0)
+        # CPU proxy; sparse device phase-2 is measured by
+        # query_perf.run_phase2_scale
+        dev = DeviceQueryEngine(ix, phase2_mode="host")
         qs, qt = random_queries(g, n_queries, seed=78)
         dev.answer(qs[:256], qt[:256])
         with Timer() as tq:

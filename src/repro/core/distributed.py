@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..kernels import ops as kops
+from ..parallel.sharding import shard_map_compat
 
 
 def _own_rows(table, ids):
@@ -66,8 +67,8 @@ def classify_sharded(mesh, state, cs, ct, *, use_pallas: bool = False,
         # exactly one shard owns each source row; non-owners contribute 0
         return jax.lax.psum(jnp.where(own, v_local, 0), "model")
 
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         kern, mesh=mesh,
         in_specs=(P("model", None), P("model", None), qspec, qspec),
-        out_specs=qspec, check_vma=False)
+        out_specs=qspec)
     return fn(state["slab"], state["meta"], cs, ct)

@@ -83,6 +83,37 @@ class PackedIndex:
         meta = np.stack([word0, self.tau, sp, sm], axis=1)
         return np.ascontiguousarray(slab), np.ascontiguousarray(meta)
 
+    def ell_layout(self, width: Optional[int] = None, width_cap: int = 32):
+        """Fixed-width ELL adjacency for the sparse phase-2 frontier engine
+        (kernels/frontier.py), with a COO tail for heavy out-degrees.
+
+        Returns (ell, tail_src, tail_dst):
+          ell      [n, W] int32 — first W out-neighbors of each node, -1 pad.
+                   One contiguous gather row per frontier node: the device
+                   BFS expands a compacted frontier with ``ell[front]``.
+          tail_*   [m_t] int32 — COO edges of nodes whose out-degree exceeds
+                   W (the heavy tail a fixed-width slab cannot hold). These
+                   are swept edge-parallel per step, so correctness never
+                   depends on W; W only trades slab padding vs tail size.
+
+        W defaults to min(max_out_degree, width_cap): scale-free graphs have
+        a tiny number of hub rows, and capping W keeps the slab at n·W·4 B
+        instead of n·max_deg·4 B.
+        """
+        deg = np.diff(self.adj_indptr).astype(np.int64)
+        if width is None:
+            width = int(min(max(1, self.max_out_degree), width_cap))
+        m = int(self.adj_indices.size)
+        src = np.repeat(np.arange(self.n, dtype=np.int64), deg)
+        rank = np.arange(m, dtype=np.int64) - np.repeat(
+            self.adj_indptr[:-1].astype(np.int64), deg)
+        in_ell = rank < width
+        ell = np.full((self.n, width), -1, dtype=np.int32)
+        ell[src[in_ell], rank[in_ell]] = self.adj_indices[in_ell]
+        tail_src = src[~in_ell].astype(np.int32)
+        tail_dst = self.adj_indices[~in_ell].astype(np.int32)
+        return ell, tail_src, tail_dst
+
     def to_device(self, sharding=None, fused: bool = True):
         """Return a dict of jnp arrays (optionally with a NamedSharding)."""
         import jax

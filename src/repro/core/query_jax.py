@@ -7,17 +7,39 @@ Two phases (DESIGN.md §3):
   §5 filters. On real workloads this resolves the overwhelming majority
   (measured in benchmarks/query_*).
 
-  Phase 2  (this module): UNKNOWN queries run the *guided online search* as
-  dense linear algebra: the frontier of each query is a 0/1 row vector and
-  one expansion step is ``frontier @ A`` on the MXU, masked by per-node
-  verdicts (expandable = approximate hit & passes filters, definite_pos =
-  exact hit / seed-positive / target). This is the TPU-native form of the
-  paper's pruned DFS: same visited set, same answers — property-tested
-  against core.query.QueryEngine.
+  Phase 2  (this module): UNKNOWN queries run the *guided online search* on
+  device. Three engines, selected by ``phase2_mode``:
 
-  Graphs with n > n_dense_max fall back to the host engine for the UNKNOWN
-  residue (production: host cores handle the irregular tail while the TPU
-  streams phase 1).
+    dense   [Q, n] frontier row-vectors stepped with ``frontier @ A`` on the
+            MXU — unbeatable at small n, but the n×n adjacency and [Q, n]
+            verdict planes cap it at n ≤ n_dense_max (default 8192).
+    sparse  the default at scale (`kernels.frontier`): the condensed DAG is
+            packed into a fixed-width ELL slab + COO heavy tail
+            (`PackedIndex.ell_layout`), and a chunk of queries expands in
+            lockstep under one ``jax.lax.while_loop`` — per step the
+            compacted frontier gathers its ELL rows, candidates are deduped
+            with a fixed-size ``jnp.unique``, classified against their
+            targets with the same interval + filter + seed rules, and
+            visited bits are segment-OR'd into a [Q, ⌈n/32⌉] bitset. Same
+            visited-set semantics and answers as the host guided DFS, no
+            n×n anywhere, no per-query host Python in the loop. A frontier
+            that outgrows its capacity sets an overflow flag; the driver
+            retries unresolved queries with 4× capacity (positives found
+            under overflow are already sound) and falls back to the host
+            engine only past ``frontier_cap_max``.
+    host    per-query guided DFS on `core.query.QueryEngine` — the paper-
+            faithful reference, kept for comparison and as the terminal
+            fallback.
+
+  ``phase2_mode="auto"`` picks dense for n ≤ n_dense_max and sparse above.
+
+  Memory model (per phase-2 chunk of Q queries): dense is Q·n verdict
+  planes + n² adjacency; sparse is n·W·4 B ELL slab (shared, W ≈ 32) +
+  Q·⌈n/32⌉·4 B visited bitset + cap·4 B frontier — at n = 10⁶, W = 16,
+  Q = 256 that is 64 MB + 32 MB + KBs, vs 4 TB for the dense adjacency.
+  Query-id key packing bounds a sparse chunk at 2^(31-⌈log₂n⌉) - 1
+  queries; the driver chunks accordingly (32767 at n = 50k, 127 at
+  n = 16M).
 """
 from __future__ import annotations
 
@@ -41,7 +63,10 @@ class ServeStats:
     phase1_pos: int = 0
     phase1_neg: int = 0
     phase2_queries: int = 0
+    phase2_dense: int = 0
+    phase2_sparse: int = 0
     phase2_host: int = 0
+    sparse_retries: int = 0
 
 
 @partial(jax.jit, static_argnames=("max_steps",))
@@ -76,25 +101,50 @@ class DeviceQueryEngine:
     """answer(srcs, dsts) with identical semantics to core.query.QueryEngine."""
 
     def __init__(self, index: FerrariIndex, n_dense_max: int = 8192,
-                 phase2_chunk: int = 256, use_pallas: bool = True):
+                 phase2_chunk: int = 256, use_pallas: bool = True,
+                 phase2_mode: str = "auto", ell_width: Optional[int] = None,
+                 frontier_cap: int = 4096, frontier_cap_max: int = 1 << 18):
+        if phase2_mode not in ("auto", "dense", "sparse", "host"):
+            raise ValueError(f"unknown phase2_mode {phase2_mode!r}")
         self.index = index
         self.packed: PackedIndex = pack_index(index)
         self.dev = self.packed.to_device()
         self.comp = jnp.asarray(self.packed.comp)
         self.use_pallas = use_pallas
         self.phase2_chunk = phase2_chunk
+        self.ell_width = ell_width
+        self.frontier_cap = frontier_cap
+        self.frontier_cap_max = frontier_cap_max
         self.stats = ServeStats()
         n = self.packed.n
-        self._dense_ok = n <= n_dense_max
-        if self._dense_ok:
+        self.max_steps = int(index.tl.blevel[:n].max(initial=0)) + 1
+        if phase2_mode == "auto":
+            phase2_mode = "dense" if n <= n_dense_max else "sparse"
+        self.phase2_mode = phase2_mode
+        self.adj_dense = None
+        if phase2_mode == "dense":
             a = np.zeros((n, n), dtype=np.float32)
             src, dst = index.cond.dag.edges()
             a[src, dst] = 1.0
             self.adj_dense = jnp.asarray(a)
-            self.max_steps = int(index.tl.blevel[:n].max(initial=0)) + 1
-        else:
-            self.adj_dense = None
-            self._host = QueryEngine(index)
+        self._ell_dev = None          # built lazily on first sparse use
+        self._host_engine = None      # built lazily on first host use
+
+    # ------------------------------------------------------ lazy structures
+    @property
+    def _host(self) -> QueryEngine:
+        if self._host_engine is None:
+            self._host_engine = QueryEngine(self.index)
+        return self._host_engine
+
+    def _ell(self):
+        if self._ell_dev is None:
+            ell, tsrc, tdst = self.packed.ell_layout(width=self.ell_width)
+            is_hub = np.zeros(self.packed.n, dtype=bool)
+            is_hub[tsrc] = True
+            self._ell_dev = (jnp.asarray(ell), jnp.asarray(tsrc),
+                             jnp.asarray(tdst), jnp.asarray(is_hub))
+        return self._ell_dev
 
     # --------------------------------------------------------------- phase 1
     def classify(self, srcs, dsts):
@@ -118,17 +168,23 @@ class DeviceQueryEngine:
             return out
         cs_u = np.asarray(cs)[unknown]
         ct_u = np.asarray(ct)[unknown]
-        if self._dense_ok:
+        if self.phase2_mode == "dense":
+            self.stats.phase2_dense += unknown.size
             res = self._phase2_dense(cs_u, ct_u)
+        elif self.phase2_mode == "sparse":
+            res = self._phase2_sparse(cs_u, ct_u)
         else:
             self.stats.phase2_host += unknown.size
-            res = np.fromiter(
-                (self._host._reachable_condensed(int(a), int(b))
-                 for a, b in zip(cs_u, ct_u)), dtype=bool, count=unknown.size)
+            res = self._phase2_host(cs_u, ct_u)
         out[unknown] = res
         return out
 
     # --------------------------------------------------------------- phase 2
+    def _phase2_host(self, cs_u: np.ndarray, ct_u: np.ndarray) -> np.ndarray:
+        return np.fromiter(
+            (self._host._reachable_condensed(int(a), int(b))
+             for a, b in zip(cs_u, ct_u)), dtype=bool, count=cs_u.size)
+
     def _phase2_dense(self, cs_u: np.ndarray, ct_u: np.ndarray) -> np.ndarray:
         n = self.packed.n
         res = np.zeros(cs_u.size, dtype=bool)
@@ -142,4 +198,46 @@ class DeviceQueryEngine:
             pos = _dense_bfs(front0, expandable, definite_pos,
                              self.adj_dense, self.max_steps)
             res[lo:hi] = np.asarray(pos)
+        return res
+
+    def _phase2_sparse(self, cs_u: np.ndarray, ct_u: np.ndarray) -> np.ndarray:
+        ell, tsrc, tdst, is_hub = self._ell()
+        n = self.packed.n
+        chunk = min(self.phase2_chunk, ops.frontier_max_batch(n))
+        res = np.zeros(cs_u.size, dtype=bool)
+        self.stats.phase2_sparse += cs_u.size
+        for lo in range(0, cs_u.size, chunk):
+            hi = min(lo + chunk, cs_u.size)
+            q = hi - lo
+            cs = np.zeros(chunk, np.int32)
+            ct = np.zeros(chunk, np.int32)
+            cs[:q] = cs_u[lo:hi]
+            ct[:q] = ct_u[lo:hi]
+            pad = np.ones(chunk, bool)
+            pad[:q] = False
+            cs_j, ct_j = jnp.asarray(cs), jnp.asarray(ct)
+            cap = max(self.frontier_cap, chunk)
+            pos = np.zeros(chunk, bool)
+            while True:
+                p, ovf = ops.expand_frontier(
+                    self.dev, ell, tsrc, tdst, is_hub, cs_j, ct_j,
+                    jnp.asarray(pad), max_steps=self.max_steps, cap=cap)
+                pos |= np.asarray(p)
+                if not bool(ovf):
+                    break
+                # overflow: POS answers are sound, only non-positives need
+                # the retry — mask them out and rerun with 4x the capacity
+                cap *= 4
+                self.stats.sparse_retries += 1
+                if cap > self.frontier_cap_max:
+                    unresolved = np.flatnonzero(~pos & ~pad)
+                    self.stats.phase2_host += unresolved.size
+                    self.stats.phase2_sparse -= unresolved.size
+                    pos[unresolved] = self._phase2_host(cs[unresolved],
+                                                       ct[unresolved])
+                    break
+                pad = pad | pos
+                if pad.all():
+                    break       # every live query already proved positive
+            res[lo:hi] = pos[:q]
         return res

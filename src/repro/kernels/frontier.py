@@ -1,0 +1,163 @@
+"""Sparse device-resident phase-2 frontier expansion (guided batched BFS).
+
+Replaces the dense ``[Q, n] @ [n, n]`` phase-2 step of `core.query_jax` with
+a layout that works for arbitrary ``n``: the condensed DAG is held as a
+fixed-width ELL slab (`PackedIndex.ell_layout`) plus a COO heavy tail, and a
+batch of UNKNOWN queries expands in lockstep under one
+``jax.lax.while_loop``. Per step:
+
+  1. gather   — ``ell[front_v]`` pulls the W out-neighbors of every entry in
+     the compacted frontier (one contiguous row per node, no n×n matrix);
+     hub nodes spill into an edge-parallel sweep of the COO tail, gated by a
+     per-query frontier bitset.
+  2. dedup    — candidate (query, node) pairs are packed into int31 keys and
+     compacted with ``jnp.unique(size=cap+1)``; the cap+1 slot doubles as an
+     overflow detector (the caller retries with a larger cap — positives
+     found under overflow are sound, only negatives are re-examined).
+  3. classify — every surviving candidate is classified against its query's
+     target with the same interval-stab + filter + seed rules as phase 1
+     (`kernels.ref`, pure jnp so it traces inside the loop): POS proves the
+     query, NEG prunes, UNKNOWN joins the next frontier. Identical visited
+     semantics to the host `core.query.QueryEngine` guided DFS.
+  4. mark     — visited bits are set by segment-OR (scatter-add of disjoint
+     powers of two into a ``[Q, ceil(n/32)]`` uint32 bitset).
+
+Memory: ELL slab n·W·4 B (shared across the batch), visited bitset
+Q·⌈n/32⌉·4 B, frontier cap·4 B, per-step candidates (cap·W + Q·m_tail)·4 B.
+Nothing is O(n²) and no per-query host Python runs inside the loop.
+
+Keys pack (query, node) into a non-negative int32: node in the low
+``vbits = ceil(log2 n)`` bits, query above, sentinel = INT32_MAX. This
+bounds the batch at ``2**(31 - vbits) - 1`` queries per expansion (32767
+at n = 50k, 127 at n = 16M) — the driver chunks accordingly.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+SENTINEL = jnp.int32(2**31 - 1)
+
+
+def key_bits(n: int) -> int:
+    """Bits needed for a node id; queries use the remaining 31 - vbits."""
+    return max(1, int(n - 1).bit_length())
+
+
+def max_batch(n: int) -> int:
+    # minus one: at a full 2**(31-vbits) batch the key of (last query,
+    # node n-1) could equal SENTINEL when n is a power of two
+    return (1 << (31 - key_bits(n))) - 1
+
+
+def _bit(v):
+    return jnp.uint32(1) << (v & 31).astype(jnp.uint32)
+
+
+@partial(jax.jit, static_argnames=("max_steps", "cap"))
+def expand_frontier(packed_dev: dict, ell, tail_src, tail_dst, is_hub,
+                    cs, ct, pad, *, max_steps: int, cap: int):
+    """Batched guided BFS for one chunk of UNKNOWN queries.
+
+    ell:       [n, W] int32 (-1 pad); tail_src/tail_dst: [m_t] int32 COO;
+               is_hub: [n] bool, true for nodes with edges in the tail (the
+               O(Q·m_t) tail sweep + its larger sort run under a lax.cond
+               only on steps whose frontier actually contains a hub).
+    cs/ct:     [Q] int32 condensed source/target ids; pad: [Q] bool marks
+               slots that are batch padding (never expanded).
+    Returns (pos [Q] bool, overflow scalar bool). Under overflow, True
+    entries are sound but False entries may be incomplete — retry larger.
+    """
+    n, w = ell.shape
+    q = cs.shape[0]
+    m_t = int(tail_src.shape[0])
+    vbits = key_bits(n)
+    vmask = jnp.int32((1 << vbits) - 1)
+    n_words = (n + 31) // 32
+    assert q <= cap and q < (1 << (31 - vbits))  # strict: key != SENTINEL
+
+    qi = jnp.arange(q, dtype=jnp.int32)
+    front0 = jnp.where(pad, SENTINEL, (qi << vbits) | cs)
+    front0 = jnp.concatenate(
+        [front0, jnp.full((cap - q,), SENTINEL, jnp.int32)])
+    visited0 = jnp.zeros((q, n_words), jnp.uint32).at[qi, cs >> 5].add(
+        jnp.where(pad, jnp.uint32(0), _bit(cs)))
+    pos0 = jnp.zeros((q,), jnp.bool_)
+
+    def cond(state):
+        front, visited, pos, overflow, step = state
+        return ((step < max_steps) & ~overflow
+                & jnp.any(front != SENTINEL))
+
+    def body(state):
+        front, visited, pos, overflow, step = state
+        fvalid = front != SENTINEL
+        fq = jnp.where(fvalid, front >> vbits, 0)
+        fv = jnp.where(fvalid, front & vmask, 0)
+
+        def dedup(cq, cv, ok):
+            # mask answered queries + already-visited nodes, then compact:
+            # dedup + sort via fixed-size unique; slot cap detects overflow
+            cq = jnp.where(ok, cq, 0)
+            cv = jnp.where(ok, cv, 0)
+            ok &= ~pos[cq]                                  # query answered
+            ok &= ((visited[cq, cv >> 5] >> (cv & 31).astype(jnp.uint32))
+                   & 1) == 0                                # already seen
+            keys = jnp.where(ok, (cq << vbits) | cv, SENTINEL)
+            return jnp.unique(keys, size=cap + 1, fill_value=SENTINEL)
+
+        # 1. gather: ELL rows of the compacted frontier
+        nbr = ell[fv]                                       # [cap, W]
+        ell_cq = jnp.broadcast_to(fq[:, None], (cap, w)).reshape(-1)
+        ell_cv = nbr.reshape(-1)
+        ell_ok = (fvalid[:, None] & (nbr >= 0)).reshape(-1)
+        if m_t:
+            def with_tail(_):
+                # heavy tail: edge-parallel sweep gated by a frontier bitset
+                fbits = jnp.zeros((q, n_words), jnp.uint32).at[
+                    fq, fv >> 5].add(
+                        jnp.where(fvalid, _bit(fv), jnp.uint32(0)))
+                act = (fbits[:, tail_src >> 5]
+                       >> (tail_src & 31).astype(jnp.uint32)[None, :]) & 1
+                cq = jnp.concatenate(
+                    [ell_cq,
+                     jnp.broadcast_to(qi[:, None], (q, m_t)).reshape(-1)])
+                cv = jnp.concatenate(
+                    [ell_cv,
+                     jnp.broadcast_to(tail_dst[None, :], (q, m_t)).reshape(-1)])
+                return dedup(cq, cv,
+                             jnp.concatenate([ell_ok, (act == 1).reshape(-1)]))
+
+            def ell_only(_):
+                return dedup(ell_cq, ell_cv, ell_ok)
+
+            # the O(Q*m_t) sweep + larger sort only when a hub is in frontier
+            uniq = jax.lax.cond(jnp.any(is_hub[fv] & fvalid),
+                                with_tail, ell_only, None)
+        else:
+            uniq = dedup(ell_cq, ell_cv, ell_ok)
+        overflow |= uniq[cap] != SENTINEL
+        new = uniq[:cap]
+        nvalid = new != SENTINEL
+        nq = jnp.where(nvalid, new >> vbits, 0)
+        nv = jnp.where(nvalid, new & vmask, 0)
+
+        # 3. classify each candidate against its query's target — the same
+        # ref rules as phase 1 (pure jnp, traces inside the while_loop)
+        verdict = ref.classify_packed_dev_ref(packed_dev, nv, ct[nq])
+        pos = pos.at[nq].max(nvalid & (verdict == ref.POS))
+
+        # 4. segment-OR the visited bits (deduped ⇒ add of disjoint powers)
+        visited = visited.at[nq, nv >> 5].add(
+            jnp.where(nvalid, _bit(nv), jnp.uint32(0)))
+        front = jnp.where(nvalid & (verdict == ref.UNKNOWN) & ~pos[nq],
+                          new, SENTINEL)
+        return front, visited, pos, overflow, step + 1
+
+    _, _, pos, overflow, _ = jax.lax.while_loop(
+        cond, body, (front0, visited0, pos0, jnp.bool_(False), jnp.int32(0)))
+    return pos, overflow

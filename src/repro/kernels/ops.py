@@ -14,6 +14,8 @@ import numpy as np
 
 from . import ref
 from .batched_mp import batched_mp as _batched_mp
+from .frontier import expand_frontier as _expand_frontier
+from .frontier import max_batch as frontier_max_batch  # noqa: F401 (re-export)
 from .flash_attention import flash_attention as _flash
 from .interval_stab import interval_stab_classify as _stab
 from .interval_stab import interval_stab_classify_packed as _stab_packed
@@ -51,6 +53,10 @@ def classify_queries(packed_dev: dict, cs, ct, *, use_pallas: bool = True,
     12-array layout otherwise. Returns verdict [Q] int32; the [cs == ct]
     early positive is applied here.
     """
+    if not use_pallas and not packed_dev.get("_prefetched"):
+        # shared pure-jnp dispatch — the same rules the sparse phase-2
+        # frontier loop classifies with (kernels.ref)
+        return ref.classify_packed_dev_ref(packed_dev, cs, ct)
     if packed_dev.get("_prefetched") or "slab" in packed_dev:
         if packed_dev.get("_prefetched"):
             # rows already exchanged (core.distributed sharded placement)
@@ -107,6 +113,19 @@ def classify_all_nodes_vs_target(packed_dev: dict, ct, *, node_chunk=None):
         return v
     v = jax.vmap(one)(ct)                     # [Q, n]
     return v == UNKNOWN, v == POS
+
+
+def expand_frontier(packed_dev: dict, ell, tail_src, tail_dst, is_hub,
+                    cs, ct, pad, *, max_steps: int, cap: int):
+    """Sparse phase-2 engine: batched guided BFS over the ELL + tail layout
+    (kernels.frontier). cs/ct: [Q] condensed ids of UNKNOWN queries; pad
+    marks batch-padding slots; is_hub gates the tail sweep per step.
+    Returns (pos [Q] bool, overflow bool) — under overflow, positives are
+    sound and the caller retries the rest with a larger cap. Chunk size is
+    bounded by ``frontier_max_batch(n)``.
+    """
+    return _expand_frontier(packed_dev, ell, tail_src, tail_dst, is_hub,
+                            cs, ct, pad, max_steps=max_steps, cap=cap)
 
 
 def batched_mp(adj, x, w, *, use_pallas: bool = True):

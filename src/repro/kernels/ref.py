@@ -68,6 +68,33 @@ def interval_stab_classify_packed_ref(meta_s, meta_t, slab_s):
     return jnp.where(pos, POS, jnp.where(neg, NEG, UNKNOWN)).astype(jnp.int32)
 
 
+def classify_packed_dev_ref(packed_dev: dict, cs, ct):
+    """Pure-jnp classification of condensed-id pairs (cs, ct) against a
+    ``PackedIndex.to_device()`` dict — fused slab/meta layout when present,
+    naive 12-array layout otherwise, including the cs == ct early positive.
+
+    The SINGLE source of the verdict rules shared by phase 1
+    (ops.classify_queries, use_pallas=False) and the sparse phase-2 loop
+    (kernels.frontier) — edit here and both engines move together.
+    """
+    if "slab" in packed_dev:
+        meta, slab = packed_dev["meta"], packed_dev["slab"]
+        v = interval_stab_classify_packed_ref(meta[cs], meta[ct], slab[cs])
+    else:
+        pi, tau, lvl = (packed_dev["pi"], packed_dev["tau"],
+                        packed_dev["blevel"])
+        if "s_plus" in packed_dev:
+            sp, sm = packed_dev["s_plus"], packed_dev["s_minus"]
+        else:
+            sp = jnp.zeros((pi.shape[0], 1), dtype=jnp.uint32)
+            sm = sp
+        v = interval_stab_classify_ref(
+            pi[ct], tau[cs], tau[ct], lvl[cs], lvl[ct],
+            packed_dev["begins"][cs], packed_dev["ends"][cs],
+            packed_dev["exact"][cs], sp[cs], sm[cs], sp[ct], sm[ct])
+    return jnp.where(cs == ct, POS, v)
+
+
 def batched_mp_ref(adj, x, w):
     """Oracle for kernels.batched_mp: per-graph dense message passing.
 

@@ -26,16 +26,22 @@ from ..graphs.generators import scale_free_digraph
 
 def serve_reachability(n_nodes: int, avg_deg: float, n_queries: int,
                        k: int, variant: str, batch: int = 16384,
-                       seed: int = 0, workload: str = "random"):
+                       seed: int = 0, workload: str = "random",
+                       phase2: str = "auto", n_dense_max: int = 8192,
+                       ell_width: int | None = None, n_seeds: int = 32,
+                       use_seeds: bool = True):
     print(f"building graph n={n_nodes} avg_deg={avg_deg} ...", flush=True)
     g = scale_free_digraph(n_nodes, avg_deg, seed=seed)
     t0 = time.perf_counter()
-    ix = build_index(g, k=k, variant=variant)
+    ix = build_index(g, k=k, variant=variant, n_seeds=n_seeds,
+                     use_seeds=use_seeds)
     t_build = time.perf_counter() - t0
     print(f"index built in {t_build:.2f}s: {ix.stats.n_comp} SCCs, "
           f"{ix.stats.total_intervals} intervals "
           f"({ix.byte_size() / 2**20:.1f} MiB)", flush=True)
-    eng = DeviceQueryEngine(ix)
+    eng = DeviceQueryEngine(ix, phase2_mode=phase2, n_dense_max=n_dense_max,
+                            ell_width=ell_width)
+    print(f"phase-2 engine: {eng.phase2_mode}", flush=True)
     qs, qt = (random_queries if workload == "random"
               else positive_queries)(g, n_queries, seed=seed + 1)
     # warmup (jit)
@@ -91,6 +97,15 @@ def main():
     ap.add_argument("--variant", default="G")
     ap.add_argument("--workload", default="random",
                     choices=["random", "positive"])
+    ap.add_argument("--phase2", default="auto",
+                    choices=["auto", "dense", "sparse", "host"],
+                    help="phase-2 engine: auto = dense for n <= dense-max, "
+                         "sparse ELL frontier above")
+    ap.add_argument("--dense-max", type=int, default=8192)
+    ap.add_argument("--ell-width", type=int, default=None,
+                    help="ELL slab width (default min(max_out_deg, 32))")
+    ap.add_argument("--n-seeds", type=int, default=32)
+    ap.add_argument("--no-seeds", action="store_true")
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -98,7 +113,10 @@ def main():
     args = ap.parse_args()
     if args.mode == "reachability":
         serve_reachability(args.nodes, args.avg_deg, args.queries, args.k,
-                           args.variant, workload=args.workload)
+                           args.variant, workload=args.workload,
+                           phase2=args.phase2, n_dense_max=args.dense_max,
+                           ell_width=args.ell_width, n_seeds=args.n_seeds,
+                           use_seeds=not args.no_seeds)
     else:
         serve_lm(args.arch, args.batch, args.prompt_len, args.gen_len)
 

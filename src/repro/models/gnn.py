@@ -39,8 +39,9 @@ def _sharded_segment_reduce(x, seg, n_seg, ctx: ShardingCtx, reduce="sum"):
     replicated scatter."""
     if ctx.mesh is None:
         return ops.segment_mp(x, seg, n_seg, reduce)
-    from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from ..parallel.sharding import shard_map_compat
     axes = tuple(a for a in ("pod", "data") if a in ctx.mesh.shape)
     if not axes or x.shape[0] % (int(np.prod([ctx.mesh.shape[a]
                                               for a in axes]))) != 0:
@@ -54,9 +55,9 @@ def _sharded_segment_reduce(x, seg, n_seg, ctx: ShardingCtx, reduce="sum"):
         part = jax.ops.segment_max(xl, sl, num_segments=n_seg)
         return jax.lax.pmax(part, axes)
 
-    return shard_map(local, mesh=ctx.mesh,
-                     in_specs=(P(ax_entry, None), P(ax_entry)),
-                     out_specs=P(), check_rep=False)(x, seg)
+    return shard_map_compat(local, mesh=ctx.mesh,
+                            in_specs=(P(ax_entry, None), P(ax_entry)),
+                            out_specs=P())(x, seg)
 
 
 def _glorot(key, shape, dtype=jnp.float32):

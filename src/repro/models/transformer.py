@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import LMConfig
-from ..parallel.sharding import NO_SHARDING, ShardingCtx
+from ..parallel.sharding import NO_SHARDING, ShardingCtx, shard_map_compat
 from .attention import chunked_attention, decode_attention
 from .common import apply_rope, cross_entropy, normal_init, rms_norm
 
@@ -211,8 +211,8 @@ def _moe_ffn_shardmap(cfg: LMConfig, lp, x, ctx: ShardingCtx):
         out = jax.lax.psum(out, red_axes)
         return out.reshape(Bl, Sl, Dl).astype(xb.dtype)
 
-    fn = jax.shard_map(kernel, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    fn = shard_map_compat(kernel, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs)
     return fn(x, router, wg, wu, wd)
 
 

@@ -19,8 +19,9 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .sharding import shard_map_compat
 
 
 def pipeline_forward(mesh: Mesh, stage_fn: Callable, n_stages: int,
@@ -61,8 +62,8 @@ def pipeline_forward(mesh: Mesh, stage_fn: Callable, n_stages: int,
 
     in_specs = (P(axis), P())
     out_specs = P()
-    return shard_map(per_device, mesh=mesh, in_specs=in_specs,
-                     out_specs=out_specs, check_rep=False)
+    return shard_map_compat(per_device, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs)
 
 
 def demo_stage_fn(params, x):

@@ -1,0 +1,95 @@
+"""Tiny deterministic stand-in for the `hypothesis` API surface these tests
+use, so the tier-1 suite collects and runs on a bare jax+numpy+pytest
+environment. When real hypothesis is installed the test modules import it
+instead (see the try/except at each module top) and this file is inert.
+
+Supported subset:
+    @given(*strategies, **kw_strategies)   positional and keyword styles
+    @settings(max_examples=N, deadline=None)
+    st.integers(lo, hi)    inclusive bounds, like hypothesis
+    st.floats(lo, hi)
+    st.booleans()
+    st.sampled_from(seq)
+
+Each example is drawn from a numpy Generator seeded by (test name, example
+index), so failures reproduce exactly across runs. No shrinking — the
+failing drawn values are attached to the exception instead.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw, desc):
+        self._draw = draw
+        self._desc = desc
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return self._desc
+
+
+class _Strategies:
+    @staticmethod
+    def integers(lo, hi):
+        return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)),
+                         f"integers({lo}, {hi})")
+
+    @staticmethod
+    def floats(lo, hi):
+        return _Strategy(lambda rng: float(rng.uniform(lo, hi)),
+                         f"floats({lo}, {hi})")
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)), "booleans()")
+
+    @staticmethod
+    def sampled_from(seq):
+        items = list(seq)
+        return _Strategy(lambda rng: items[int(rng.integers(0, len(items)))],
+                         f"sampled_from({items!r})")
+
+
+strategies = _Strategies()
+st = strategies
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strats, **kw_strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            n = getattr(wrapper, "_shim_max_examples", DEFAULT_MAX_EXAMPLES)
+            base = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rng = np.random.default_rng((base, i))
+                args = [s.draw(rng) for s in arg_strats]
+                kwargs = {k: s.draw(rng) for k, s in kw_strats.items()}
+                try:
+                    fn(*args, **kwargs)
+                except Exception as e:
+                    e.args = (f"[{fn.__name__} example {i}: args={args} "
+                              f"kwargs={kwargs}] {e.args[0] if e.args else ''}",
+                              ) + e.args[1:]
+                    raise
+        # hide the drawn params from pytest's fixture resolution
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco

@@ -1,6 +1,9 @@
 """k-interval cover: DP optimality, greedy/topgap quality ordering."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic local shim (tests/_hyp.py)
+    from _hyp import given, settings, st
 
 from repro.core import cover as cov
 from repro.core import intervals as iv

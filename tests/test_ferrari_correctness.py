@@ -2,7 +2,10 @@
 brute-force reachability on random graphs — the system's core invariant."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic local shim (tests/_hyp.py)
+    from _hyp import given, settings, st
 
 from repro.core.ferrari import build_index, build_interval_baseline
 from repro.core.grail import GrailQueryEngine, build_grail

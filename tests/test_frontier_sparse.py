@@ -1,0 +1,186 @@
+"""Sparse phase-2 frontier engine (kernels/frontier.py): parity with the
+host guided DFS and brute force, ELL/tail layout correctness, overflow
+retry soundness, and the n = 50k acceptance check with the dense path off.
+"""
+import numpy as np
+import pytest
+
+from repro.core.ferrari import build_index
+from repro.core.packed import pack_index
+from repro.core.query import QueryEngine, brute_force_closure
+from repro.core.query_jax import DeviceQueryEngine
+from repro.core.workload import positive_queries, random_queries
+from repro.graphs.generators import (layered_dag, random_dag,
+                                     scale_free_digraph)
+from repro.kernels import ops
+
+
+def _want(tc, qs, qt):
+    return np.array([tc[s, t] for s, t in zip(qs, qt)])
+
+
+# ------------------------------------------------------------- ELL layout
+@pytest.mark.parametrize("width", [None, 1, 2, 8])
+def test_ell_layout_reconstructs_adjacency(width):
+    g = scale_free_digraph(300, 3.0, seed=1)
+    p = pack_index(build_index(g, k=2, variant="G"))
+    ell, tsrc, tdst = p.ell_layout(width=width)
+    got = set()
+    for v in range(p.n):
+        got |= {(v, int(w)) for w in ell[v] if w >= 0}
+    got |= set(zip(tsrc.tolist(), tdst.tolist()))
+    want = set()
+    for v in range(p.n):
+        lo, hi = p.adj_indptr[v], p.adj_indptr[v + 1]
+        want |= {(v, int(w)) for w in p.adj_indices[lo:hi]}
+    assert got == want
+    if width is not None:
+        assert ell.shape[1] == width
+        # every edge is stored exactly once
+        n_ell = int((ell >= 0).sum())
+        assert n_ell + tsrc.size == p.adj_indices.size
+
+
+def test_ell_layout_no_tail_when_width_fits():
+    g = random_dag(200, 2.0, seed=0)
+    p = pack_index(build_index(g, k=2, variant="G"))
+    ell, tsrc, tdst = p.ell_layout(width=p.max_out_degree)
+    assert tsrc.size == 0 and tdst.size == 0
+
+
+# ----------------------------------------------------------------- parity
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_sparse_matches_bruteforce_random_dag(seed):
+    g = random_dag(300, 2.0, seed=seed)
+    tc = brute_force_closure(g)
+    ix = build_index(g, k=2, variant="G")
+    dev = DeviceQueryEngine(ix, phase2_mode="sparse")
+    qs, qt = random_queries(g, 1200, seed=seed)
+    assert np.array_equal(dev.answer(qs, qt), _want(tc, qs, qt))
+
+
+@pytest.mark.parametrize("seed", [0, 5])
+def test_sparse_matches_bruteforce_scale_free(seed):
+    g = scale_free_digraph(400, 3.0, seed=seed)
+    tc = brute_force_closure(g)
+    ix = build_index(g, k=2, variant="G")
+    dev = DeviceQueryEngine(ix, phase2_mode="sparse")
+    qs, qt = random_queries(g, 1200, seed=seed)
+    ps, pt = positive_queries(g, 300, seed=seed + 1)
+    qs, qt = np.concatenate([qs, ps]), np.concatenate([qt, pt])
+    assert np.array_equal(dev.answer(qs, qt), _want(tc, qs, qt))
+
+
+def test_sparse_phase2_exercised_matches_host_and_bruteforce():
+    """Weak index (k=1, no seeds) => heavy UNKNOWN residue; sparse engine,
+    host engine and brute force must all agree; no host fallback."""
+    g = layered_dag(500, 20, 3.0, seed=3)
+    tc = brute_force_closure(g)
+    ix = build_index(g, k=1, variant="L", use_seeds=False)
+    dev = DeviceQueryEngine(ix, phase2_mode="sparse")
+    host = QueryEngine(ix)
+    qs, qt = random_queries(g, 2000, seed=0)
+    got = dev.answer(qs, qt)
+    assert np.array_equal(got, _want(tc, qs, qt))
+    assert np.array_equal(got, host.batch(qs, qt))
+    assert dev.stats.phase2_sparse > 0
+    assert dev.stats.phase2_host == 0
+
+
+@pytest.mark.parametrize("ell_width", [1, 2])
+def test_sparse_tail_sweep_path(ell_width):
+    """Tiny ELL width forces most edges through the COO heavy-tail sweep."""
+    g = layered_dag(400, 16, 3.0, seed=4)
+    tc = brute_force_closure(g)
+    ix = build_index(g, k=1, variant="L", use_seeds=False)
+    dev = DeviceQueryEngine(ix, phase2_mode="sparse", ell_width=ell_width)
+    ell, tsrc, _ = dev.packed.ell_layout(width=ell_width)
+    assert tsrc.size > 0, "tail must actually be exercised"
+    qs, qt = random_queries(g, 1500, seed=2)
+    assert np.array_equal(dev.answer(qs, qt), _want(tc, qs, qt))
+    assert dev.stats.phase2_sparse > 0
+
+
+def test_sparse_small_chunk_padding():
+    """Chunk smaller than the residue exercises batch padding + chunking."""
+    g = layered_dag(400, 16, 3.0, seed=6)
+    tc = brute_force_closure(g)
+    ix = build_index(g, k=1, variant="L", use_seeds=False)
+    dev = DeviceQueryEngine(ix, phase2_mode="sparse", phase2_chunk=16)
+    qs, qt = random_queries(g, 1000, seed=3)
+    assert np.array_equal(dev.answer(qs, qt), _want(tc, qs, qt))
+    assert dev.stats.phase2_sparse > 16
+
+
+def test_sparse_overflow_retry_sound():
+    """A tiny frontier cap forces the overflow -> retry-larger path; the
+    answers must be unchanged and the retries visible in stats."""
+    g = layered_dag(500, 20, 3.0, seed=3)
+    tc = brute_force_closure(g)
+    ix = build_index(g, k=1, variant="L", use_seeds=False)
+    dev = DeviceQueryEngine(ix, phase2_mode="sparse", phase2_chunk=64,
+                            frontier_cap=64, frontier_cap_max=1 << 14)
+    qs, qt = random_queries(g, 1500, seed=1)
+    assert np.array_equal(dev.answer(qs, qt), _want(tc, qs, qt))
+    assert dev.stats.sparse_retries > 0
+    assert dev.stats.phase2_host == 0
+
+
+def test_sparse_cap_exhaustion_falls_back_to_host():
+    g = layered_dag(500, 20, 3.0, seed=3)
+    tc = brute_force_closure(g)
+    ix = build_index(g, k=1, variant="L", use_seeds=False)
+    dev = DeviceQueryEngine(ix, phase2_mode="sparse", phase2_chunk=64,
+                            frontier_cap=64, frontier_cap_max=64)
+    qs, qt = random_queries(g, 800, seed=2)
+    assert np.array_equal(dev.answer(qs, qt), _want(tc, qs, qt))
+    assert dev.stats.phase2_host > 0
+
+
+def test_all_unknown_adversarial_batch():
+    """A batch consisting ONLY of phase-1 UNKNOWNs (the adversarial residue
+    a production load balancer could concentrate on one replica)."""
+    g = layered_dag(500, 20, 3.0, seed=3)
+    tc = brute_force_closure(g)
+    ix = build_index(g, k=1, variant="L", use_seeds=False)
+    dev = DeviceQueryEngine(ix, phase2_mode="sparse")
+    qs, qt = random_queries(g, 2000, seed=5)
+    v, _, _ = dev.classify(qs, qt)
+    unk = np.flatnonzero(np.asarray(v) == ops.UNKNOWN)
+    assert unk.size > 100
+    dev2 = DeviceQueryEngine(ix, phase2_mode="sparse")
+    got = dev2.answer(qs[unk], qt[unk])
+    assert np.array_equal(got, _want(tc, qs[unk], qt[unk]))
+    assert dev2.stats.phase2_queries == unk.size
+    assert dev2.stats.phase2_sparse == unk.size
+
+
+def test_sparse_and_dense_agree():
+    g = layered_dag(600, 24, 3.0, seed=8)
+    ix = build_index(g, k=1, variant="L", use_seeds=False)
+    sparse = DeviceQueryEngine(ix, phase2_mode="sparse")
+    dense = DeviceQueryEngine(ix, phase2_mode="dense")
+    qs, qt = random_queries(g, 1500, seed=4)
+    assert np.array_equal(sparse.answer(qs, qt), dense.answer(qs, qt))
+    assert sparse.stats.phase2_sparse > 0
+    assert dense.stats.phase2_dense > 0
+
+
+# -------------------------------------------------------------- acceptance
+def test_sparse_50k_parity_no_host_python():
+    """Acceptance: n = 50_000 with the dense path disabled — device answers
+    must match the host engine on a workload with a real phase-2 residue,
+    with zero per-query host fallbacks."""
+    n = 50_000
+    g = layered_dag(n, 60, 3.0, seed=7)
+    ix = build_index(g, k=1, variant="L", n_seeds=64)
+    dev = DeviceQueryEngine(ix, phase2_mode="sparse")
+    assert dev.adj_dense is None                     # dense path really off
+    host = QueryEngine(ix)
+    qs, qt = random_queries(g, 800, seed=1)
+    ps, pt = positive_queries(g, 200, seed=2)
+    qs, qt = np.concatenate([qs, ps]), np.concatenate([qt, pt])
+    got = dev.answer(qs, qt)
+    assert np.array_equal(got, host.batch(qs, qt))
+    assert dev.stats.phase2_sparse > 50
+    assert dev.stats.phase2_host == 0

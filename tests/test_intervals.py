@@ -1,7 +1,10 @@
 """Interval algebra unit + property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic local shim (tests/_hyp.py)
+    from _hyp import given, settings, st
 
 from repro.core import intervals as iv
 

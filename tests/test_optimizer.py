@@ -2,8 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic local shim (tests/_hyp.py)
+    from _hyp import given, settings, st
 
 from repro.optim.optimizer import (OptConfig, adamw_init, adamw_update,
                                    clip_by_global_norm, schedule_lr)

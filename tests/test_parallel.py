@@ -30,7 +30,8 @@ def run_with_devices(body: str):
 def test_pipeline_matches_sequential():
     out = run_with_devices(r"""
 from repro.parallel.pipeline import pipeline_forward, demo_stage_fn
-mesh = jax.make_mesh((4,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((4,), ("pod",))
 rng = np.random.default_rng(0)
 D, B, S = 8, 16, 4
 params = {"w": jnp.asarray(rng.standard_normal((S, D, D)), jnp.float32),
@@ -49,14 +50,15 @@ print("PIPELINE_OK")
 
 def test_compressed_psum_close_to_exact():
     out = run_with_devices(r"""
-from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.optim.compression import compressed_psum
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh_compat
+from repro.parallel.sharding import shard_map_compat
+mesh = make_mesh_compat((4,), ("data",))
 rng = np.random.default_rng(0)
 x = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)
-f = shard_map(lambda v: compressed_psum(v[0], "data"), mesh=mesh,
-              in_specs=P("data", None), out_specs=P(None), check_rep=False)
+f = shard_map_compat(lambda v: compressed_psum(v[0], "data"), mesh=mesh,
+                     in_specs=P("data", None), out_specs=P(None))
 got = jax.jit(f)(x)
 want = np.asarray(x).sum(0)
 err = np.abs(np.asarray(got) - want).max()
@@ -71,8 +73,8 @@ def test_gnn_sharded_segment_sum_matches_local():
     out = run_with_devices(r"""
 from repro.models.gnn import _sharded_segment_reduce
 from repro.parallel.sharding import ShardingCtx
-mesh = jax.make_mesh((4, 1), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((4, 1), ("data", "model"))
 rng = np.random.default_rng(0)
 m, n, d = 64, 10, 5
 x = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)

@@ -10,8 +10,10 @@ Invariants:
 """
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic local shim (tests/_hyp.py)
+    from _hyp import given, settings, st
 
 from repro.core.ferrari import build_index
 from repro.core.packed import pack_index

@@ -1,7 +1,10 @@
 """Device engine ≡ host engine ≡ brute force; phase statistics; seeds."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic local shim (tests/_hyp.py)
+    from _hyp import given, settings, st
 
 from repro.core.ferrari import build_index
 from repro.core.query import QueryEngine, brute_force_closure
@@ -41,7 +44,7 @@ def test_device_host_fallback_correct():
     g = random_dag(300, 2.0, seed=5)
     tc = brute_force_closure(g)
     ix = build_index(g, k=2, variant="L")
-    dev = DeviceQueryEngine(ix, n_dense_max=10)   # force host fallback
+    dev = DeviceQueryEngine(ix, phase2_mode="host")   # force host fallback
     qs, qt = random_queries(g, 800, seed=1)
     got = dev.answer(qs, qt)
     want = np.array([tc[s, t] for s, t in zip(qs, qt)])

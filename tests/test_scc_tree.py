@@ -1,7 +1,10 @@
 """SCC condensation + tree cover / post-order invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic local shim (tests/_hyp.py)
+    from _hyp import given, settings, st
 
 from repro.core.scc import condense, is_dag
 from repro.core.tree_cover import (backward_levels, build_tree_labels,

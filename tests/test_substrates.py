@@ -117,13 +117,13 @@ def test_schedule_warmup_and_decay():
 # ---------------------------------------------------------------- sharding --
 
 def _mesh22():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_compat
+    return make_mesh_compat((1, 1), ("data", "model"))
 
 
 def test_logical_to_spec_divisibility_fallback():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
     # sizes divide trivially on a 1x1 mesh
     spec = logical_to_spec(("batch", "embed"), (8, 16), mesh)
     assert spec is not None
@@ -131,8 +131,8 @@ def test_logical_to_spec_divisibility_fallback():
 
 def test_zero1_spec_adds_data_axis():
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
     sp = zero1_spec(P(None, "model"), (16, 32), mesh)
     assert sp[0] in ("data", ("data",)) or sp[0] is None  # 16 % 1 == 0
 

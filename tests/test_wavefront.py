@@ -1,7 +1,10 @@
 """Device wavefront constructor ≡ host FERRARI-L(topgap); budget; queries."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare env: deterministic local shim (tests/_hyp.py)
+    from _hyp import given, settings, st
 
 from repro.core import intervals as iv
 from repro.core.construction_jax import build_wavefront, labels_from_wavefront
