@@ -1,4 +1,11 @@
-"""Paper Tables 5-8: varying the size constraint k (and GRAIL's d)."""
+"""Paper Tables 5-8: varying the size constraint k (and GRAIL's d).
+
+Runs through the ``repro.reach`` facade: one IndexSpec per (variant, k)
+point, a QuerySession per index, and ``reset_stats()`` between the random
+and positive workloads so each phase mix is attributed to its own workload
+(previously the engine counters accumulated across both and skewed the
+reported resolution rates).
+"""
 from __future__ import annotations
 
 from .common import Timer, emit, get_graph, quick_mode
@@ -6,9 +13,8 @@ from .common import Timer, emit, get_graph, quick_mode
 
 def run(datasets=("pubmed-like", "citpatents-like", "webuk-like"),
         ks=(1, 2, 3, 5), n_queries: int | None = None):
-    from repro.core.ferrari import build_index
-    from repro.core.query_jax import DeviceQueryEngine
     from repro.core.workload import positive_queries, random_queries
+    from repro.reach import IndexSpec, QuerySession, build
     n_queries = n_queries or (10_000 if quick_mode() else 100_000)
     results = {}
     for name in datasets:
@@ -17,24 +23,35 @@ def run(datasets=("pubmed-like", "citpatents-like", "webuk-like"),
         ps, pt = positive_queries(g, n_queries, seed=24)
         for variant in ("L", "G"):
             for k in ks:
-                with Timer() as tb:
-                    ix = build_index(g, k=k, variant=variant)
                 # CPU proxy; sparse device phase-2 is measured by
                 # query_perf.run_phase2_scale
-                dev = DeviceQueryEngine(ix, phase2_mode="host")
-                dev.answer(qs[:256], qt[:256])
+                spec = IndexSpec(k=k, variant=variant, phase2_mode="host")
+                with Timer() as tb:
+                    ix = build(g, spec)
+                sess = QuerySession(ix, spec)
+                sess.query(qs[:256], qt[:256])   # warm phase 1 + phase 2
+                sess.warmup(min(n_queries, spec.max_batch),
+                            n_queries % spec.max_batch)
                 with Timer() as tr:
-                    dev.answer(qs, qt)
+                    sess.query(qs, qt)
+                stats_random = sess.stats
+                sess.reset_stats()
                 with Timer() as tp:
-                    dev.answer(ps, pt)
+                    sess.query(ps, pt)
+                stats_positive = sess.stats
                 key = f"{name}/ferrari-{variant}/k={k}"
                 results[key] = {"build": tb.seconds, "random": tr.seconds,
                                 "positive": tp.seconds,
                                 "intervals": ix.n_intervals(),
-                                "bytes": ix.byte_size()}
+                                "bytes": ix.byte_size(),
+                                "phase2_random": stats_random.phase2_queries,
+                                "phase2_positive":
+                                    stats_positive.phase2_queries}
                 emit(f"sweep/{key}", tr.seconds / n_queries * 1e6,
                      f"build_s={tb.seconds:.2f};kb={ix.byte_size() / 1024:.0f};"
-                     f"pos_us={tp.seconds / n_queries * 1e6:.2f}")
+                     f"pos_us={tp.seconds / n_queries * 1e6:.2f};"
+                     f"p2_rand={stats_random.phase2_queries};"
+                     f"p2_pos={stats_positive.phase2_queries}")
     return results
 
 

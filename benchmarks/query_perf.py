@@ -1,8 +1,14 @@
 """Paper Tables 3c/3d (4c/4d): query processing time, random + positive
 workloads. Two engines per index: the paper-faithful host engine (guided
 DFS, comparable to the C++ numbers modulo Python constant factors) and the
-batched device engine (our production path — the number that matters)."""
+batched device engine (our production path — the number that matters).
+
+``run_bench_json`` distills the serving numbers into ``BENCH_query.json``
+(ns/query, phase mix, build seconds) — the machine-readable perf trajectory
+consumed by CI (see .github/workflows/ci.yml, bench-smoke)."""
 from __future__ import annotations
+
+import json
 
 import numpy as np
 
@@ -10,16 +16,19 @@ from .common import LARGE, SMALL, WEB, Timer, emit, get_graph, quick_mode
 
 
 def _run_workload(name, g, kind, n_queries, k, d_grail):
-    from repro.core.ferrari import build_index
     from repro.core.grail import GrailQueryEngine, build_grail
     from repro.core.query import QueryEngine
-    from repro.core.query_jax import DeviceQueryEngine
     from repro.core.workload import positive_queries, random_queries
+    from repro.reach import IndexSpec, QuerySession, build
     qs, qt = (random_queries if kind == "random"
               else positive_queries)(g, n_queries, seed=17)
     out = {}
     for variant in ("L", "G"):
-        ix = build_index(g, k=k, variant=variant)
+        # phase-2 via host fallback (the device phase-2 paths are TPU
+        # paths; emulating them on 1 CPU core would benchmark the
+        # emulator). Device phase-2 is covered by tests + run_phase2_scale.
+        spec = IndexSpec(k=k, variant=variant, phase2_mode="host")
+        ix = build(g, spec)
         host = QueryEngine(ix)
         with Timer() as t:
             r_host = host.batch(qs, qt)
@@ -27,21 +36,21 @@ def _run_workload(name, g, kind, n_queries, k, d_grail):
         emit(f"query-{kind}/{name}/ferrari-{variant}-host",
              t.seconds / n_queries * 1e6,
              f"expand={host.stats.answered_expand}")
-        # device engine: phase-2 via host fallback (the device phase-2 paths
-        # are TPU paths; emulating them on 1 CPU core would benchmark the
-        # emulator). Device phase-2 is covered by tests + run_phase2_scale.
-        dev = DeviceQueryEngine(ix, phase2_mode="host")
-        dev.answer(qs[:256], qt[:256])          # jit warmup
+        sess = QuerySession(ix, spec)
+        sess.query(qs[:256], qt[:256])          # jit + phase-2 warmup
+        sess.warmup(min(n_queries, spec.max_batch),
+                    n_queries % spec.max_batch)
         with Timer() as t:
-            r_dev = dev.answer(qs, qt)
+            r_dev = sess.query(qs, qt)
         out[f"ferrari-{variant}/device"] = t.seconds
         emit(f"query-{kind}/{name}/ferrari-{variant}-device",
              t.seconds / n_queries * 1e6,
              f"ns_per_q={t.seconds / n_queries * 1e9:.0f};"
-             f"p2={dev.stats.phase2_queries}")
+             f"p2={sess.stats.phase2_queries}")
         assert np.array_equal(r_host, r_dev), "engines disagree!"
         # phase-1-only classification throughput (the TPU serving hot path)
         import jax
+        dev = sess.engine
         cls = jax.jit(lambda a, b: dev.classify(a, b)[0])
         cls(qs[:256], qt[:256])
         with Timer() as t:
@@ -80,7 +89,7 @@ def run_phase2_scale(sizes=None, n_queries: int | None = None):
     """
     from repro.core.ferrari import build_index
     from repro.core.query import QueryEngine
-    from repro.core.query_jax import DeviceQueryEngine, ServeStats
+    from repro.core.query_jax import DeviceQueryEngine
     from repro.core.workload import positive_queries, random_queries
     from repro.graphs.generators import layered_dag, scale_free_digraph
     from repro.kernels import ops
@@ -106,7 +115,7 @@ def run_phase2_scale(sizes=None, n_queries: int | None = None):
                 continue
             uq, ut = qs[unk], qt[unk]
             dev.answer(uq[:256], ut[:256])           # jit warmup
-            dev.stats = ServeStats()                 # don't count warmup
+            dev.stats.reset()                        # don't count warmup
             with Timer() as t:
                 r_dev = dev.answer(uq, ut)
             emit(f"phase2-scale/{fam}/n{n}/sparse-device",
@@ -125,7 +134,71 @@ def run_phase2_scale(sizes=None, n_queries: int | None = None):
     return out
 
 
+def run_bench_json(out_path: str = "BENCH_query.json", datasets=None,
+                   n_queries: int | None = None, k: int = 2):
+    """Serve both workloads per dataset through the ``repro.reach`` facade
+    and write the perf summary as JSON: build seconds, ns/query, and the
+    phase-resolution mix from the unified SessionStats."""
+    from repro.core.workload import positive_queries, random_queries
+    from repro.reach import IndexSpec, QuerySession, build
+    datasets = datasets or (SMALL + LARGE + WEB)
+    n_queries = n_queries or (20_000 if quick_mode() else 100_000)
+    out = {"k": k, "n_queries": n_queries, "datasets": {}}
+    for name in datasets:
+        g = get_graph(name)
+        # host phase-2 on the 1-core CPU proxy (same rationale as run());
+        # device phase-2 is measured by run_phase2_scale
+        spec = IndexSpec(k=k, variant="G", phase2_mode="host")
+        with Timer() as tb:
+            ix = build(g, spec)
+        sess = QuerySession(ix, spec)
+        entry = {"build_seconds": tb.seconds, "n_nodes": int(g.n),
+                 "n_edges": int(g.m), "intervals": ix.n_intervals(),
+                 "index_bytes": ix.byte_size()}
+        for kind in ("random", "positive"):
+            qs, qt = (random_queries if kind == "random"
+                      else positive_queries)(g, n_queries, seed=17)
+            sess.query(qs[:256], qt[:256])     # warm phase 1 + phase 2
+            sess.warmup(min(n_queries, sess.spec.max_batch),
+                        n_queries % sess.spec.max_batch)
+            with Timer() as t:
+                sess.query(qs, qt)
+            st = sess.stats
+            entry[kind] = {
+                "ns_per_query": t.seconds / n_queries * 1e9,
+                "phase1_pos": st.phase1_pos, "phase1_neg": st.phase1_neg,
+                "phase2_queries": st.phase2_queries,
+                "phase2_host": st.phase2_host,
+                "n_batches": st.n_batches, "n_padded": st.n_padded,
+                "trace_count": sess.trace_count,
+            }
+            emit(f"bench-json/{name}/{kind}", t.seconds / n_queries * 1e6,
+                 f"p2={st.phase2_queries}")
+            sess.reset_stats()
+        out["datasets"][name] = entry
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {out_path}", flush=True)
+    return out
+
+
 if __name__ == "__main__":
-    run(kind="random")
-    run(kind="positive")
-    run_phase2_scale()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", nargs="?", const="BENCH_query.json",
+                    default=None, metavar="PATH",
+                    help="write BENCH_query.json instead of the full "
+                         "emit-CSV sweep")
+    ap.add_argument("--datasets", default=None,
+                    help="comma-separated dataset names (benchmarks.common)")
+    ap.add_argument("--queries", type=int, default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size workloads (default: quick mode)")
+    args = ap.parse_args()
+    ds = tuple(args.datasets.split(",")) if args.datasets else None
+    if args.json:
+        run_bench_json(args.json, datasets=ds, n_queries=args.queries)
+    else:
+        run(datasets=ds, kind="random", n_queries=args.queries)
+        run(datasets=ds, kind="positive", n_queries=args.queries)
+        run_phase2_scale(n_queries=args.queries)

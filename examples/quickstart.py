@@ -1,13 +1,16 @@
-"""Quickstart: build a FERRARI index and answer reachability queries.
+"""Quickstart: build a FERRARI index, persist it, and serve queries
+through the ``repro.reach`` facade.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import tempfile
+
 import numpy as np
 
+from repro import reach
 from repro.core import intervals as iv
 from repro.core.ferrari import build_index
 from repro.core.query import QueryEngine
-from repro.core.query_jax import DeviceQueryEngine
 from repro.graphs.generators import scale_free_digraph, small_example_graph
 
 
@@ -25,23 +28,31 @@ def paper_example():
         print(f"  {names[s]} ~> {names[t]} ? {eng.reachable(s, t)}")
 
 
-def web_graph_demo():
-    print("\n=== 50k-node web-like graph, batched device serving ===")
+def facade_demo():
+    print("\n=== 50k-node web-like graph: build -> save -> load -> serve ===")
     g = scale_free_digraph(50_000, 4.0, seed=0)
-    ix = build_index(g, k=2, variant="G")
+    spec = reach.IndexSpec(k=2, variant="G")     # the one knob object
+    ix = reach.build(g, spec)
     print(f"  condensed: {ix.stats.n_comp} SCC nodes, "
           f"{ix.stats.total_intervals} intervals, "
           f"{ix.byte_size() / 2**20:.1f} MiB, "
           f"built in {ix.stats.seconds_total:.2f}s")
-    dev = DeviceQueryEngine(ix)
-    rng = np.random.default_rng(1)
-    qs = rng.integers(0, g.n, 10_000)
-    qt = rng.integers(0, g.n, 10_000)
-    ans = dev.answer(qs, qt)
-    print(f"  10k queries -> {int(ans.sum())} positive; "
-          f"phase stats: {dev.stats}")
+    with tempfile.TemporaryDirectory() as d:
+        reach.save_index(d, ix, spec)            # npz artifact + manifest
+        sess = reach.QuerySession.load(d)        # seconds, not a rebuild
+        rng = np.random.default_rng(1)
+        qs = rng.integers(0, g.n, 10_000)
+        qt = rng.integers(0, g.n, 10_000)
+        ans = sess.query(qs, qt)                 # bucketed micro-batches
+        print(f"  10k queries -> {int(ans.sum())} positive; "
+              f"{sess.trace_count} phase-1 traces")
+        # queued serving: small requests coalesce into full micro-batches
+        tickets = [sess.submit(qs[i::10], qt[i::10]) for i in range(10)]
+        results = sess.drain()
+        assert all(t in results for t in tickets)
+        print(f"  phase stats: {sess.stats}")
 
 
 if __name__ == "__main__":
     paper_example()
-    web_graph_demo()
+    facade_demo()

@@ -2,24 +2,29 @@
 requests against a size-constrained index over a web-scale-like graph).
 
 Builds FERRARI-G under budget k=2 on a 100k-node scale-free digraph with
-SCCs, then serves 100k random + 20k positive queries in batches, reporting
-ns/query and the phase-resolution breakdown (paper §7.5 analogue).
+SCCs, then serves 100k random + 20k positive queries through the
+``repro.reach.QuerySession`` facade, reporting ns/query and the unified
+phase-resolution breakdown (paper §7.5 analogue). Pass --index-dir to
+persist the index on the first run and serve from the artifact afterwards.
 
     PYTHONPATH=src python examples/reachability_serve.py [--nodes N]
 """
 import argparse
 
 from repro.launch.serve import serve_reachability
+from repro.reach import IndexSpec
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--nodes", type=int, default=100_000)
     ap.add_argument("--queries", type=int, default=100_000)
     ap.add_argument("--k", type=int, default=2)
+    ap.add_argument("--index-dir", default=None)
     args = ap.parse_args()
+    spec = IndexSpec(k=args.k, variant="G")
     print("== random workload ==")
-    serve_reachability(args.nodes, 4.0, args.queries, args.k, "G",
-                       workload="random")
+    serve_reachability(args.nodes, 4.0, args.queries, spec=spec,
+                       workload="random", index_dir=args.index_dir)
     print("\n== positive workload ==")
-    serve_reachability(args.nodes, 4.0, args.queries // 5, args.k, "G",
-                       workload="positive")
+    serve_reachability(args.nodes, 4.0, args.queries // 5, spec=spec,
+                       workload="positive", index_dir=args.index_dir)

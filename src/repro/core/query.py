@@ -7,7 +7,7 @@ for device phase-2 expansion.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import MISSING, dataclass, field, fields
 
 import numpy as np
 
@@ -15,8 +15,19 @@ from .ferrari import FerrariIndex
 from .seeds import seed_verdict
 
 
+class ResettableStats:
+    """Mixin: ``reset()`` restores every dataclass field to its default."""
+
+    def reset(self) -> None:
+        """Clear all counters (between workloads, after warmup, ...)."""
+        for f in fields(self):
+            setattr(self, f.name,
+                    f.default_factory() if f.default_factory is not MISSING
+                    else f.default)
+
+
 @dataclass
-class QueryStats:
+class QueryStats(ResettableStats):
     n_queries: int = 0
     n_positive: int = 0
     answered_scc: int = 0        # [u] == [v] early positive

@@ -54,11 +54,11 @@ import numpy as np
 from ..kernels import ops
 from .ferrari import FerrariIndex
 from .packed import PackedIndex, pack_index
-from .query import QueryEngine
+from .query import QueryEngine, ResettableStats
 
 
 @dataclass
-class ServeStats:
+class ServeStats(ResettableStats):
     n_queries: int = 0
     phase1_pos: int = 0
     phase1_neg: int = 0
@@ -98,16 +98,26 @@ def _dense_bfs(front0, expandable, definite_pos, adj, max_steps: int):
 
 
 class DeviceQueryEngine:
-    """answer(srcs, dsts) with identical semantics to core.query.QueryEngine."""
+    """answer(srcs, dsts) with identical semantics to core.query.QueryEngine.
+
+    Prefer constructing through the ``repro.reach`` facade (``IndexSpec`` +
+    ``QuerySession``): it owns bucketed batching, statistics and
+    persistence. This class stays as the low-level two-phase executor.
+
+    ``packed`` / ``ell`` inject pre-built layouts (e.g. from a persisted
+    artifact — ``reach.persist``) so construction skips the O(n) host
+    packing loops.
+    """
 
     def __init__(self, index: FerrariIndex, n_dense_max: int = 8192,
                  phase2_chunk: int = 256, use_pallas: bool = True,
                  phase2_mode: str = "auto", ell_width: Optional[int] = None,
-                 frontier_cap: int = 4096, frontier_cap_max: int = 1 << 18):
+                 frontier_cap: int = 4096, frontier_cap_max: int = 1 << 18,
+                 packed: Optional[PackedIndex] = None, ell=None):
         if phase2_mode not in ("auto", "dense", "sparse", "host"):
             raise ValueError(f"unknown phase2_mode {phase2_mode!r}")
         self.index = index
-        self.packed: PackedIndex = pack_index(index)
+        self.packed: PackedIndex = pack_index(index) if packed is None else packed
         self.dev = self.packed.to_device()
         self.comp = jnp.asarray(self.packed.comp)
         self.use_pallas = use_pallas
@@ -127,8 +137,14 @@ class DeviceQueryEngine:
             src, dst = index.cond.dag.edges()
             a[src, dst] = 1.0
             self.adj_dense = jnp.asarray(a)
+        self._ell_host = ell          # optional injected (ell, tsrc, tdst)
         self._ell_dev = None          # built lazily on first sparse use
         self._host_engine = None      # built lazily on first host use
+        # One jitted phase-1 executor per engine: its compile cache is keyed
+        # by batch shape, so _cache_size() counts traces — the serving
+        # session asserts this stays at one per padding bucket.
+        self._classify_exec = jax.jit(
+            partial(ops.classify_queries, use_pallas=use_pallas))
 
     # ------------------------------------------------------ lazy structures
     @property
@@ -139,7 +155,10 @@ class DeviceQueryEngine:
 
     def _ell(self):
         if self._ell_dev is None:
-            ell, tsrc, tdst = self.packed.ell_layout(width=self.ell_width)
+            if self._ell_host is not None:
+                ell, tsrc, tdst = self._ell_host
+            else:
+                ell, tsrc, tdst = self.packed.ell_layout(width=self.ell_width)
             is_hub = np.zeros(self.packed.n, dtype=bool)
             is_hub[tsrc] = True
             self._ell_dev = (jnp.asarray(ell), jnp.asarray(tsrc),
@@ -147,11 +166,15 @@ class DeviceQueryEngine:
         return self._ell_dev
 
     # --------------------------------------------------------------- phase 1
+    @property
+    def trace_count(self) -> int:
+        """Phase-1 jit traces so far (grows only on unseen batch shapes)."""
+        return self._classify_exec._cache_size()
+
     def classify(self, srcs, dsts):
         cs = self.comp[jnp.asarray(srcs)]
         ct = self.comp[jnp.asarray(dsts)]
-        verdict = ops.classify_queries(self.dev, cs, ct,
-                                       use_pallas=self.use_pallas)
+        verdict = self._classify_exec(self.dev, cs, ct)
         return verdict, cs, ct
 
     # ------------------------------------------------------------------ API
@@ -187,17 +210,25 @@ class DeviceQueryEngine:
 
     def _phase2_dense(self, cs_u: np.ndarray, ct_u: np.ndarray) -> np.ndarray:
         n = self.packed.n
+        chunk = self.phase2_chunk
         res = np.zeros(cs_u.size, dtype=bool)
-        for lo in range(0, cs_u.size, self.phase2_chunk):
-            hi = min(lo + self.phase2_chunk, cs_u.size)
-            cs = jnp.asarray(cs_u[lo:hi], dtype=jnp.int32)
-            ct = jnp.asarray(ct_u[lo:hi], dtype=jnp.int32)
+        for lo in range(0, cs_u.size, chunk):
+            hi = min(lo + chunk, cs_u.size)
+            q = hi - lo
+            # fixed chunk shape: a ragged tail would retrace the BFS; pad
+            # with (0, 0) self-queries, which resolve at step 0
+            cs_h = np.zeros(chunk, dtype=np.int32)
+            ct_h = np.zeros(chunk, dtype=np.int32)
+            cs_h[:q] = cs_u[lo:hi]
+            ct_h[:q] = ct_u[lo:hi]
+            cs = jnp.asarray(cs_h)
+            ct = jnp.asarray(ct_h)
             expandable, definite_pos = ops.classify_all_nodes_vs_target(
                 self.dev, ct)
             front0 = jax.nn.one_hot(cs, n, dtype=jnp.bool_)
             pos = _dense_bfs(front0, expandable, definite_pos,
                              self.adj_dense, self.max_steps)
-            res[lo:hi] = np.asarray(pos)
+            res[lo:hi] = np.asarray(pos)[:q]
         return res
 
     def _phase2_sparse(self, cs_u: np.ndarray, ct_u: np.ndarray) -> np.ndarray:

@@ -2,61 +2,109 @@
 
 Two serving paths, matching the paper's kind (index serving) plus LM decode:
 
-  * reachability: build a FERRARI index over a (synthetic) web-like graph,
-    answer batched query streams through the two-phase device engine, report
-    per-query latency and phase statistics — the production analogue of the
-    paper's §7 query-processing experiments.
+  * reachability: obtain a FERRARI index (build it, or load a persisted
+    artifact in seconds), then serve batched query streams through the
+    ``repro.reach.QuerySession`` facade — bucketed micro-batching, unified
+    SessionStats, no jit retraces after warmup. The production analogue of
+    the paper's §7 query-processing experiments.
   * lm: prefill + decode loop over a smoke-scale LM (batched requests).
 
     PYTHONPATH=src python -m repro.launch.serve --mode reachability \
-        --nodes 20000 --queries 100000 --k 2
+        --nodes 20000 --queries 100000 --k 2 --index-dir /tmp/ferrari-idx
 """
 from __future__ import annotations
 
 import argparse
 import time
+from pathlib import Path
 
 import numpy as np
 
-from ..core.ferrari import build_index
-from ..core.query_jax import DeviceQueryEngine
 from ..core.workload import positive_queries, random_queries
 from ..graphs.generators import scale_free_digraph
+from ..reach import IndexSpec, QuerySession, build, save_index
 
 
 def serve_reachability(n_nodes: int, avg_deg: float, n_queries: int,
-                       k: int, variant: str, batch: int = 16384,
+                       k: int = 2, variant: str = "G", batch: int = 16384,
                        seed: int = 0, workload: str = "random",
                        phase2: str = "auto", n_dense_max: int = 8192,
                        ell_width: int | None = None, n_seeds: int = 32,
-                       use_seeds: bool = True):
+                       use_seeds: bool = True,
+                       spec: IndexSpec | None = None,
+                       index_dir: str | None = None):
+    """Serve a synthetic reachability workload through the facade.
+
+    ``spec`` is the one source of truth; the individual knob kwargs
+    (k/variant/phase2/...) are the pre-facade signature, kept as a thin
+    deprecation shim and folded into an IndexSpec when ``spec`` is None.
+    ``index_dir``: load the index artifact from there if one is committed,
+    else build and save there (first run builds, reruns load).
+    """
+    if spec is None:
+        spec = IndexSpec(k=(None if variant == "full" else k),
+                         variant=variant, n_seeds=n_seeds,
+                         use_seeds=use_seeds, phase2_mode=phase2,
+                         n_dense_max=n_dense_max, ell_width=ell_width,
+                         max_batch=batch, min_bucket=min(256, batch))
+    batch = spec.max_batch            # the session's actual micro-batch size
     print(f"building graph n={n_nodes} avg_deg={avg_deg} ...", flush=True)
     g = scale_free_digraph(n_nodes, avg_deg, seed=seed)
+    graph_meta = {"generator": "scale_free_digraph", "n_nodes": n_nodes,
+                  "avg_deg": avg_deg, "seed": seed}
     t0 = time.perf_counter()
-    ix = build_index(g, k=k, variant=variant, n_seeds=n_seeds,
-                     use_seeds=use_seeds)
-    t_build = time.perf_counter() - t0
-    print(f"index built in {t_build:.2f}s: {ix.stats.n_comp} SCCs, "
-          f"{ix.stats.total_intervals} intervals "
-          f"({ix.byte_size() / 2**20:.1f} MiB)", flush=True)
-    eng = DeviceQueryEngine(ix, phase2_mode=phase2, n_dense_max=n_dense_max,
-                            ell_width=ell_width)
-    print(f"phase-2 engine: {eng.phase2_mode}", flush=True)
+    loaded = False
+    if index_dir is not None and any(Path(index_dir).glob("step_*.done")):
+        sess = QuerySession.load(index_dir, spec)
+        # an index is only valid for the graph it was built over: answers
+        # against any other graph are silently garbage (gather clamping),
+        # so reject mismatched artifacts outright
+        saved_graph = sess.artifact_manifest["extra"].get(
+            "user_meta", {}).get("graph")
+        if saved_graph is not None and saved_graph != graph_meta:
+            raise ValueError(
+                f"index artifact at {index_dir} was built over "
+                f"{saved_graph}, not {graph_meta}; rebuild it or point "
+                f"--index-dir elsewhere")
+        if sess.index.cond.comp.shape[0] != g.n:
+            raise ValueError(
+                f"index artifact at {index_dir} covers "
+                f"{sess.index.cond.comp.shape[0]} nodes, graph has {g.n}")
+        t_build = time.perf_counter() - t0
+        loaded = True
+        print(f"index loaded from {index_dir} in {t_build:.2f}s", flush=True)
+    else:
+        ix = build(g, spec)
+        t_build = time.perf_counter() - t0
+        print(f"index built in {t_build:.2f}s: {ix.stats.n_comp} SCCs, "
+              f"{ix.stats.total_intervals} intervals "
+              f"({ix.byte_size() / 2**20:.1f} MiB)", flush=True)
+        if index_dir is not None:
+            save_index(index_dir, ix, spec, meta={"graph": graph_meta})
+            print(f"index saved to {index_dir}", flush=True)
+        sess = QuerySession(ix, spec)
+    print(f"phase-2 engine: {sess.engine.phase2_mode}", flush=True)
     qs, qt = (random_queries if workload == "random"
               else positive_queries)(g, n_queries, seed=seed + 1)
-    # warmup (jit)
-    eng.answer(qs[:min(batch, n_queries)], qt[:min(batch, n_queries)])
+    # warmup: a real first batch compiles phase 1 + the phase-2 path it
+    # exercises; then pre-trace the ragged-tail bucket so the timed loop
+    # never compiles (asserted by tests via trace_count)
+    first = min(batch, n_queries)
+    sess.query(qs[:first], qt[:first])
+    sess.warmup(n_queries % batch)        # no-op when the stream divides
     t0 = time.perf_counter()
-    pos = 0
-    for lo in range(0, n_queries, batch):
-        hi = min(lo + batch, n_queries)
-        pos += int(eng.answer(qs[lo:hi], qt[lo:hi]).sum())
+    ans = sess.query(qs, qt)              # session chops into micro-batches
     dt = time.perf_counter() - t0
+    pos = int(ans.sum())
+    stats = sess.stats
     print(f"{n_queries} {workload} queries in {dt * 1e3:.1f} ms "
-          f"({dt / n_queries * 1e9:.0f} ns/query), {pos} positive")
-    print(f"phase stats: {eng.stats}")
+          f"({dt / n_queries * 1e9:.0f} ns/query), {pos} positive, "
+          f"{sess.trace_count} phase-1 traces")
+    print(f"phase stats: {stats}")
     return {"seconds": dt, "ns_per_query": dt / n_queries * 1e9,
-            "positive": pos, "stats": eng.stats, "build_seconds": t_build}
+            "positive": pos, "stats": stats, "build_seconds": t_build,
+            "loaded": loaded, "trace_count": sess.trace_count,
+            "spec": spec}
 
 
 def serve_lm(arch: str, batch: int, prompt_len: int, gen_len: int):
@@ -93,30 +141,26 @@ def main():
     ap.add_argument("--nodes", type=int, default=20_000)
     ap.add_argument("--avg-deg", type=float, default=4.0)
     ap.add_argument("--queries", type=int, default=100_000)
-    ap.add_argument("--k", type=int, default=2)
-    ap.add_argument("--variant", default="G")
     ap.add_argument("--workload", default="random",
                     choices=["random", "positive"])
-    ap.add_argument("--phase2", default="auto",
-                    choices=["auto", "dense", "sparse", "host"],
-                    help="phase-2 engine: auto = dense for n <= dense-max, "
-                         "sparse ELL frontier above")
-    ap.add_argument("--dense-max", type=int, default=8192)
-    ap.add_argument("--ell-width", type=int, default=None,
-                    help="ELL slab width (default min(max_out_deg, 32))")
-    ap.add_argument("--n-seeds", type=int, default=32)
-    ap.add_argument("--no-seeds", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--index-dir", default=None,
+                    help="load the index artifact from here if committed, "
+                         "else build and save here")
+    IndexSpec.add_cli_args(ap)       # --k --variant --phase2 --max-batch ...
     ap.add_argument("--arch", default="tinyllama-1.1b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="lm mode: decode batch size")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
     args = ap.parse_args()
     if args.mode == "reachability":
-        serve_reachability(args.nodes, args.avg_deg, args.queries, args.k,
-                           args.variant, workload=args.workload,
-                           phase2=args.phase2, n_dense_max=args.dense_max,
-                           ell_width=args.ell_width, n_seeds=args.n_seeds,
-                           use_seeds=not args.no_seeds)
+        # clamp before construction: IndexSpec validates max_batch >= min_bucket
+        args.min_bucket = min(args.min_bucket, args.max_batch)
+        spec = IndexSpec.from_args(args)
+        serve_reachability(args.nodes, args.avg_deg, args.queries,
+                           seed=args.seed, workload=args.workload,
+                           spec=spec, index_dir=args.index_dir)
     else:
         serve_lm(args.arch, args.batch, args.prompt_len, args.gen_len)
 

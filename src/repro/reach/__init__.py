@@ -1,0 +1,28 @@
+"""repro.reach — the public serving facade for the FERRARI reproduction.
+
+One import gives the whole build → persist → serve pipeline:
+
+    from repro import reach
+
+    spec = reach.IndexSpec(k=2, variant="G", phase2_mode="sparse")
+    ix = reach.build(g, spec)                  # FerrariIndex (core.ferrari)
+    reach.save_index("idx/", ix, spec)         # npz artifact (checkpoint/)
+
+    sess = reach.QuerySession.load("idx/")     # seconds, not a rebuild
+    answers = sess.query(srcs, dsts)           # bucketed micro-batches
+    print(sess.stats)                          # unified SessionStats
+
+The underlying pieces (``core.ferrari.build_index``,
+``core.query_jax.DeviceQueryEngine``) remain importable for low-level use,
+but every driver in ``launch/``, ``benchmarks/`` and ``examples/`` goes
+through this facade.
+"""
+from .persist import IndexArtifact, load_index, save_index  # noqa: F401
+from .session import QuerySession, SessionStats             # noqa: F401
+from .spec import IndexSpec, build, make_engine             # noqa: F401
+
+__all__ = [
+    "IndexSpec", "build", "make_engine",
+    "save_index", "load_index", "IndexArtifact",
+    "QuerySession", "SessionStats",
+]

@@ -1,0 +1,179 @@
+"""Index persistence — a built FerrariIndex as an on-disk artifact.
+
+Build/query is a two-stage pipeline with a serializable index in the middle
+(the framing of Jin & Wang's reachability oracles and the survey literature):
+construction is minutes at web scale, serving must start in seconds. This
+module stores the complete queryable state through the ``checkpoint/`` layer
+(npz shards + JSON manifest + atomic ``.done`` commit), so index artifacts
+get the same preemption-safety and retention semantics as training state.
+
+What is saved, beyond the FerrariIndex itself: the ``PackedIndex`` interval
+slabs and the ELL + COO-tail adjacency of the sparse phase-2 engine. Both
+are produced by host-side Python loops over all n nodes at build time;
+persisting them makes ``load_index`` a pure array read, so a ``QuerySession``
+on a loaded artifact answers bit-identically to one on the freshly built
+index without re-running any packing.
+
+Loading reads the npz host-side on purpose (no jnp round-trip): index arrays
+are int64-heavy and ``jax.numpy`` would silently downcast them under the
+default x64-disabled config.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass
+from pathlib import Path
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..checkpoint.checkpoint import latest_step, save_checkpoint
+from ..core.ferrari import BuildStats, FerrariIndex
+from ..core.packed import PackedIndex, pack_index
+from ..core.scc import Condensation
+from ..core.seeds import SeedLabels
+from ..core.tree_cover import TreeLabels
+from ..graphs.csr import CSR
+from .spec import IndexSpec
+
+FORMAT_VERSION = 1
+
+
+@dataclass
+class IndexArtifact:
+    """A loaded index plus everything needed to serve it immediately."""
+    index: FerrariIndex
+    spec: Optional[IndexSpec]
+    packed: Optional[PackedIndex]
+    ell: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]]
+    manifest: dict
+
+
+def _flatten_labels(labels, n_aug: int):
+    indptr = np.zeros(n_aug + 1, dtype=np.int64)
+    for v in range(n_aug):
+        indptr[v + 1] = indptr[v] + labels[v][0].size
+    begins = np.concatenate([labels[v][0] for v in range(n_aug)])
+    ends = np.concatenate([labels[v][1] for v in range(n_aug)])
+    exact = np.concatenate([labels[v][2] for v in range(n_aug)])
+    return indptr, begins.astype(np.int64), ends.astype(np.int64), exact
+
+
+def save_index(path, index: FerrariIndex, spec: Optional[IndexSpec] = None,
+               include_packed: bool = True,
+               meta: Optional[dict] = None) -> Path:
+    """Persist ``index`` (and its serving layouts) under ``path``.
+
+    Returns the committed step directory. ``spec`` travels in the manifest
+    so ``load_index`` can reconstruct the exact engine configuration;
+    ``meta`` is arbitrary JSON-serializable caller context (e.g. which
+    graph the index was built over) stored as ``extra["user_meta"]`` —
+    loaders use it to reject artifact/graph mismatches.
+    """
+    tl, cond = index.tl, index.cond
+    n_aug = tl.n + 1
+    lab_indptr, lab_begins, lab_ends, lab_exact = _flatten_labels(
+        index.labels, n_aug)
+    state = {
+        "comp": cond.comp,
+        "comp_size": cond.comp_size,
+        "dag_indptr": cond.dag.indptr,
+        "dag_indices": cond.dag.indices,
+        "tau": tl.tau, "pi": tl.pi, "tbegin": tl.tbegin,
+        "parent": tl.parent, "blevel": tl.blevel,
+        "tree_indptr": tl.tree_children.indptr,
+        "tree_indices": tl.tree_children.indices,
+        "lab_indptr": lab_indptr, "lab_begins": lab_begins,
+        "lab_ends": lab_ends, "lab_exact": lab_exact,
+    }
+    if index.seeds is not None:
+        state["seed_ids"] = index.seeds.seed_ids
+        state["s_plus"] = index.seeds.s_plus
+        state["s_minus"] = index.seeds.s_minus
+    extra = {
+        "format_version": FORMAT_VERSION,
+        "kind": "ferrari-index",
+        "n_comp": int(cond.n_comp),
+        "k": (None if index.k is None else int(index.k)),
+        "variant": index.variant,
+        "stats": asdict(index.stats),
+        "spec": (None if spec is None else spec.to_dict()),
+        "user_meta": (meta or {}),
+    }
+    if include_packed:
+        pk = pack_index(index)
+        ell, tail_src, tail_dst = pk.ell_layout(
+            width=None if spec is None else spec.ell_width)
+        state.update({
+            "pk_begins": pk.begins, "pk_ends": pk.ends, "pk_exact": pk.exact,
+            "ell": ell, "tail_src": tail_src, "tail_dst": tail_dst,
+        })
+        extra["k_max"] = int(pk.k_max)
+        extra["max_out_degree"] = int(pk.max_out_degree)
+    return save_checkpoint(path, step=0, state=state, extra=extra)
+
+
+def _load_arrays(path, step: Optional[int]):
+    path = Path(path)
+    step = step if step is not None else latest_step(path)
+    if step is None:
+        raise FileNotFoundError(f"no committed index artifact under {path}")
+    d = path / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    if manifest["extra"].get("kind") != "ferrari-index":
+        raise ValueError(f"{d} is not a ferrari-index artifact")
+    ver = manifest["extra"].get("format_version")
+    if ver != FORMAT_VERSION:
+        raise ValueError(f"unsupported index format_version {ver!r} "
+                         f"(this build reads {FORMAT_VERSION})")
+    with np.load(d / "shard_0.npz") as z:
+        arrays = {p: z[f"leaf_{i}"]
+                  for i, p in enumerate(manifest["leaf_paths"])}
+    return arrays, manifest
+
+
+def load_index(path, step: Optional[int] = None) -> IndexArtifact:
+    """Load the latest committed index artifact under ``path``."""
+    a, manifest = _load_arrays(path, step)
+    extra = manifest["extra"]
+    n = int(extra["n_comp"])
+    dag = CSR(n=n, indptr=a["dag_indptr"], indices=a["dag_indices"])
+    cond = Condensation(comp=a["comp"], n_comp=n, dag=dag,
+                        comp_size=a["comp_size"])
+    tl = TreeLabels(
+        n=n, tau=a["tau"], pi=a["pi"], tbegin=a["tbegin"],
+        parent=a["parent"], blevel=a["blevel"],
+        tree_children=CSR(n=n + 1, indptr=a["tree_indptr"],
+                          indices=a["tree_indices"]))
+    lp = a["lab_indptr"]
+    lb, le, lx = a["lab_begins"], a["lab_ends"], a["lab_exact"]
+    labels = [(lb[lp[v]:lp[v + 1]], le[lp[v]:lp[v + 1]],
+               lx[lp[v]:lp[v + 1]]) for v in range(n + 1)]
+    seeds = None
+    if "seed_ids" in a:
+        seeds = SeedLabels(seed_ids=a["seed_ids"], s_plus=a["s_plus"],
+                           s_minus=a["s_minus"])
+    index = FerrariIndex(
+        cond=cond, tl=tl, labels=labels, seeds=seeds,
+        k=extra["k"], variant=extra["variant"],
+        stats=BuildStats(**extra["stats"]))
+    spec = (None if extra.get("spec") is None
+            else IndexSpec.from_dict(extra["spec"]))
+    packed = None
+    ell = None
+    if "pk_begins" in a:
+        packed = PackedIndex(
+            n=n, k_max=int(extra["k_max"]),
+            begins=a["pk_begins"], ends=a["pk_ends"], exact=a["pk_exact"],
+            pi=tl.pi[:n].astype(np.int32),
+            tau=tl.tau[:n].astype(np.int32),
+            blevel=tl.blevel[:n].astype(np.int32),
+            s_plus=(None if seeds is None else seeds.s_plus),
+            s_minus=(None if seeds is None else seeds.s_minus),
+            adj_indptr=dag.indptr.astype(np.int32),
+            adj_indices=dag.indices.astype(np.int32),
+            comp=cond.comp.astype(np.int32),
+            max_out_degree=int(extra["max_out_degree"]))
+        ell = (a["ell"], a["tail_src"], a["tail_dst"])
+    return IndexArtifact(index=index, spec=spec, packed=packed, ell=ell,
+                         manifest=manifest)

@@ -1,0 +1,224 @@
+"""QuerySession — the serving object of the ``repro.reach`` facade.
+
+Owns the jitted two-phase executors for one index and fixes the batch-shape
+problem that made the old serving loop retrace: every incoming batch is
+padded up to a power-of-two *bucket* in [min_bucket, max_batch], so a query
+stream of ragged sizes compiles once per bucket (a handful of shapes total)
+instead of once per distinct batch length. Padding rows are (0, 0)
+self-queries — they resolve in phase 1 by the [s] == [t] early-positive
+rule, never reach phase 2, and their deterministic contribution is
+subtracted from the session statistics.
+
+``submit()``/``drain()`` add queue semantics on top: many small requests
+coalesce into full micro-batches (capped at ``spec.max_batch``) before
+touching the device — the first step toward async multi-tenant serving.
+
+``SessionStats`` unifies the old per-engine ``ServeStats`` (phase mix) with
+the session-level view (batches, buckets, padding, wall-clock, host-DFS
+expansion work).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field, fields
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.query import ResettableStats
+from .spec import IndexSpec, make_engine
+
+
+@dataclass
+class SessionStats(ResettableStats):
+    """Unified serving statistics (phase mix + batching behaviour)."""
+    n_queries: int = 0
+    n_positive: int = 0
+    # phase mix (from the device engine)
+    phase1_pos: int = 0
+    phase1_neg: int = 0
+    phase2_queries: int = 0
+    phase2_dense: int = 0
+    phase2_sparse: int = 0
+    phase2_host: int = 0
+    sparse_retries: int = 0
+    host_nodes_expanded: int = 0
+    # micro-batching behaviour (session level)
+    n_batches: int = 0
+    n_padded: int = 0
+    seconds: float = 0.0
+    buckets: Dict[int, int] = field(default_factory=dict)
+
+    @property
+    def ns_per_query(self) -> float:
+        return 0.0 if not self.n_queries else self.seconds / self.n_queries * 1e9
+
+    def as_dict(self) -> dict:
+        d = {f.name: getattr(self, f.name) for f in fields(self)}
+        d["ns_per_query"] = self.ns_per_query
+        return d
+
+
+class QuerySession:
+    """Serve reachability queries against one index.
+
+    >>> sess = QuerySession(index, spec)          # or QuerySession.load(dir)
+    >>> ans = sess.query(srcs, dsts)              # bucketed micro-batches
+    >>> t = sess.submit(srcs, dsts); sess.drain() # queued micro-batching
+    """
+
+    def __init__(self, index, spec: Optional[IndexSpec] = None, *,
+                 packed=None, ell=None, engine=None):
+        self.spec = spec if spec is not None else IndexSpec()
+        self.index = index
+        self.engine = (engine if engine is not None
+                       else make_engine(index, self.spec, packed=packed,
+                                        ell=ell))
+        self._pending: List[Tuple[int, np.ndarray, np.ndarray]] = []
+        self._next_ticket = 0
+        self.artifact_manifest: Optional[dict] = None   # set by load()
+        self.reset_stats()
+
+    # ------------------------------------------------------------- loading
+    @classmethod
+    def load(cls, path, spec: Optional[IndexSpec] = None) -> "QuerySession":
+        """Open a session on a persisted index artifact (reach.persist).
+
+        ``spec`` overrides the spec stored with the artifact; the stored
+        ELL layout is reused only when its width still matches.
+        """
+        from .persist import load_index
+        art = load_index(path)
+        saved_width = None if art.spec is None else art.spec.ell_width
+        use_spec = spec if spec is not None else (art.spec or IndexSpec())
+        ell = art.ell if use_spec.ell_width == saved_width else None
+        sess = cls(art.index, use_spec, packed=art.packed, ell=ell)
+        sess.artifact_manifest = art.manifest
+        return sess
+
+    # ------------------------------------------------------------ querying
+    def query(self, srcs, dsts) -> np.ndarray:
+        """Answer a batch of original-id query pairs, micro-batched and
+        padded to power-of-two buckets."""
+        srcs = np.asarray(srcs)
+        dsts = np.asarray(dsts)
+        if srcs.shape != dsts.shape or srcs.ndim != 1:
+            raise ValueError("srcs/dsts must be equal-length 1-D arrays")
+        n = srcs.size
+        out = np.empty(n, dtype=bool)
+        t0 = time.perf_counter()
+        for lo in range(0, n, self.spec.max_batch):
+            hi = min(lo + self.spec.max_batch, n)
+            out[lo:hi] = self._answer_bucketed(srcs[lo:hi], dsts[lo:hi])
+        self._seconds += time.perf_counter() - t0
+        self._n_positive += int(out.sum())
+        return out
+
+    def _bucket(self, q: int) -> int:
+        b = self.spec.min_bucket
+        while b < q:
+            b <<= 1
+        return min(b, self.spec.max_batch)
+
+    def _answer_bucketed(self, s: np.ndarray, t: np.ndarray) -> np.ndarray:
+        q = s.size
+        b = self._bucket(q)
+        if q < b:
+            ps = np.zeros(b, dtype=np.int64)
+            pt = np.zeros(b, dtype=np.int64)
+            ps[:q] = s
+            pt[:q] = t
+            ans = self.engine.answer(ps, pt)[:q]
+            self._n_padded += b - q
+        else:
+            ans = self.engine.answer(s, t)
+        self._n_batches += 1
+        self._buckets[b] = self._buckets.get(b, 0) + 1
+        return ans
+
+    # ------------------------------------------------------- queue serving
+    def submit(self, srcs, dsts) -> int:
+        """Enqueue a request; returns a ticket for ``drain()``'s result map."""
+        srcs = np.asarray(srcs)
+        dsts = np.asarray(dsts)
+        if srcs.shape != dsts.shape or srcs.ndim != 1:
+            raise ValueError("srcs/dsts must be equal-length 1-D arrays")
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._pending.append((ticket, srcs, dsts))
+        return ticket
+
+    @property
+    def pending_queries(self) -> int:
+        return sum(s.size for _, s, _ in self._pending)
+
+    def drain(self) -> Dict[int, np.ndarray]:
+        """Answer every pending request in one coalesced bucketed stream.
+        Returns {ticket: answers}."""
+        if not self._pending:
+            return {}
+        reqs, self._pending = self._pending, []
+        cat_s = np.concatenate([s for _, s, _ in reqs])
+        cat_t = np.concatenate([t for _, _, t in reqs])
+        ans = self.query(cat_s, cat_t)
+        out: Dict[int, np.ndarray] = {}
+        lo = 0
+        for ticket, s, _ in reqs:
+            out[ticket] = ans[lo: lo + s.size]
+            lo += s.size
+        return out
+
+    # ------------------------------------------------------------- warmup
+    def warmup(self, *batch_sizes: int) -> None:
+        """Trace the buckets the given batch sizes map to (using (0, 0)
+        self-queries), then clear statistics. Phase-2 executors compile
+        lazily on the first real UNKNOWN residue; to warm those too, run a
+        representative real batch and call ``reset_stats()``."""
+        for sz in batch_sizes:
+            if sz > 0:
+                z = np.zeros(sz, dtype=np.int64)
+                self.query(z, z)
+        self.reset_stats()
+
+    # ------------------------------------------------------------- stats
+    @property
+    def trace_count(self) -> int:
+        """Number of phase-1 classify traces so far (one per bucket after
+        warmup — growth past that means shape churn is back)."""
+        return self.engine.trace_count
+
+    @property
+    def stats(self) -> SessionStats:
+        es = self.engine.stats
+        host = self.engine._host_engine
+        # padding rows are (0, 0) self-queries: each is exactly one
+        # phase-1 POS, so their contribution subtracts deterministically
+        return SessionStats(
+            n_queries=es.n_queries - self._n_padded,
+            n_positive=self._n_positive,
+            phase1_pos=es.phase1_pos - self._n_padded,
+            phase1_neg=es.phase1_neg,
+            phase2_queries=es.phase2_queries,
+            phase2_dense=es.phase2_dense,
+            phase2_sparse=es.phase2_sparse,
+            phase2_host=es.phase2_host,
+            sparse_retries=es.sparse_retries,
+            host_nodes_expanded=(0 if host is None
+                                 else host.stats.nodes_expanded),
+            n_batches=self._n_batches,
+            n_padded=self._n_padded,
+            seconds=self._seconds,
+            buckets=dict(self._buckets),
+        )
+
+    def reset_stats(self) -> None:
+        """Clear all serving statistics (engine + session). Use between
+        workloads so phase mixes don't bleed into each other."""
+        self.engine.stats.reset()
+        if self.engine._host_engine is not None:
+            self.engine._host_engine.stats.reset()
+        self._n_positive = 0
+        self._n_batches = 0
+        self._n_padded = 0
+        self._seconds = 0.0
+        self._buckets: Dict[int, int] = {}

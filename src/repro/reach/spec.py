@@ -1,0 +1,238 @@
+"""IndexSpec — the single frozen description of a FERRARI deployment.
+
+The paper's contribution is a *tunable* index: one budget knob ``k`` trades
+index size against query latency (§4). Before this module the knobs were
+scattered as positional kwargs across ``core.ferrari.build_index``,
+``core.query_jax.DeviceQueryEngine`` and ``launch.serve``; nothing could
+sweep, persist, or serve an index without re-plumbing all three. IndexSpec
+captures every build-time AND serve-time knob in one validated value that
+round-trips through dicts (for persistence manifests) and argparse (for
+CLIs), so the same spec that built an index travels with its artifact and
+reconstructs an identical serving engine.
+"""
+from __future__ import annotations
+
+import argparse
+from dataclasses import asdict, dataclass, fields
+from typing import Optional
+
+VARIANTS = ("L", "G", "full")
+COVER_METHODS = ("greedy", "dp", "topgap")
+PHASE2_MODES = ("auto", "dense", "sparse", "host")
+
+
+@dataclass(frozen=True)
+class IndexSpec:
+    """Every knob of a FERRARI build + serving engine, validated.
+
+    Build knobs (paper §4.2/§4.3): ``k`` is the per-node interval budget
+    (FERRARI-L) or the global-budget divisor B = k·n (FERRARI-G);
+    ``variant="full"`` is the k=∞ Interval baseline and requires ``k=None``.
+    Engine knobs mirror ``DeviceQueryEngine``; session knobs govern
+    ``QuerySession`` micro-batching (batches are padded up to power-of-two
+    buckets in [min_bucket, max_batch] so ragged tails never retrace).
+    """
+    # ----------------------------------------------------- build (paper §4)
+    k: Optional[int] = 2
+    variant: str = "G"
+    c: int = 4                      # FERRARI-G slack factor (§4.3, c·k)
+    cover_method: str = "greedy"
+    n_seeds: int = 32
+    use_seeds: bool = True
+    precondensed: bool = False
+    # ------------------------------------------------- engine (phase 1 + 2)
+    phase2_mode: str = "auto"
+    n_dense_max: int = 8192
+    ell_width: Optional[int] = None
+    phase2_chunk: int = 256
+    use_pallas: bool = True
+    frontier_cap: int = 4096
+    frontier_cap_max: int = 1 << 18
+    # ------------------------------------------------- session micro-batch
+    max_batch: int = 16384
+    min_bucket: int = 256
+
+    # ------------------------------------------------------------ validate
+    def __post_init__(self):
+        if self.variant not in VARIANTS:
+            raise ValueError(f"variant must be one of {VARIANTS}, "
+                             f"got {self.variant!r}")
+        if self.variant == "full":
+            if self.k is not None:
+                raise ValueError("variant='full' is the k=∞ baseline; "
+                                 "it requires k=None")
+        else:
+            if self.k is None:
+                raise ValueError("k=None (unbounded) requires variant='full'")
+            if self.k < 1:
+                raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.c < 1:
+            raise ValueError(f"c must be >= 1, got {self.c}")
+        if self.cover_method not in COVER_METHODS:
+            raise ValueError(f"cover_method must be one of {COVER_METHODS}, "
+                             f"got {self.cover_method!r}")
+        if self.use_seeds and self.n_seeds < 1:
+            raise ValueError("use_seeds=True requires n_seeds >= 1")
+        if self.phase2_mode not in PHASE2_MODES:
+            raise ValueError(f"phase2_mode must be one of {PHASE2_MODES}, "
+                             f"got {self.phase2_mode!r}")
+        if self.n_dense_max < 1:
+            raise ValueError("n_dense_max must be >= 1")
+        if self.ell_width is not None and self.ell_width < 1:
+            raise ValueError("ell_width must be >= 1 (or None for auto)")
+        if self.phase2_chunk < 1:
+            raise ValueError("phase2_chunk must be >= 1")
+        if self.frontier_cap < 1:
+            raise ValueError("frontier_cap must be >= 1")
+        if self.frontier_cap_max < self.frontier_cap:
+            raise ValueError("frontier_cap_max must be >= frontier_cap")
+        if self.min_bucket < 1:
+            raise ValueError("min_bucket must be >= 1")
+        if self.max_batch < self.min_bucket:
+            raise ValueError("max_batch must be >= min_bucket")
+
+    # -------------------------------------------------- dict serialization
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "IndexSpec":
+        known = {f.name for f in fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown IndexSpec fields: {sorted(unknown)}")
+        return cls(**d)
+
+    @classmethod
+    def from_config(cls, cfg, **overrides) -> "IndexSpec":
+        """Derive a spec from a ``configs.base.FerrariServeConfig``.
+
+        ``k_max`` is the packed slab width ≈ c·k under FERRARI-G slack, so
+        k = max(1, k_max // c); ``seed_words`` (uint32 words per direction)
+        gives n_seeds = 32·words. Any kwarg overrides the derived value.
+        """
+        c = overrides.get("c", cls.c)
+        derived = {}
+        if getattr(cfg, "k_max", None) is not None:
+            derived["k"] = max(1, int(cfg.k_max) // c)
+        if getattr(cfg, "seed_words", None) is not None:
+            derived["n_seeds"] = 32 * int(cfg.seed_words)
+        derived.update(overrides)
+        return cls(**derived)
+
+    # --------------------------------------------------- CLI serialization
+    @staticmethod
+    def add_cli_args(ap: argparse.ArgumentParser) -> None:
+        """Register every spec knob on an argparse parser (defaults = the
+        dataclass defaults, so ``from_args`` of an empty argv == IndexSpec())."""
+        d = IndexSpec()
+        ap.add_argument("--k", type=int, default=d.k,
+                        help="interval budget per node (paper §4); "
+                             "ignored for --variant full")
+        ap.add_argument("--variant", default=d.variant, choices=VARIANTS,
+                        help="L = local budget, G = global budget, "
+                             "full = k=∞ Interval baseline")
+        ap.add_argument("--c", type=int, default=d.c,
+                        help="FERRARI-G slack factor (cover to c*k first)")
+        ap.add_argument("--cover-method", default=d.cover_method,
+                        choices=COVER_METHODS)
+        ap.add_argument("--n-seeds", type=int, default=d.n_seeds)
+        ap.add_argument("--no-seeds", action="store_true",
+                        help="disable seed labels (§5.1)")
+        ap.add_argument("--precondensed", action="store_true",
+                        help="input is already a DAG: skip Tarjan")
+        ap.add_argument("--phase2", default=d.phase2_mode,
+                        choices=PHASE2_MODES, dest="phase2_mode",
+                        help="phase-2 engine: auto = dense for n <= "
+                             "dense-max, sparse ELL frontier above")
+        ap.add_argument("--dense-max", type=int, default=d.n_dense_max,
+                        dest="n_dense_max")
+        ap.add_argument("--ell-width", type=int, default=d.ell_width,
+                        help="ELL slab width (default min(max_out_deg, 32))")
+        ap.add_argument("--phase2-chunk", type=int, default=d.phase2_chunk)
+        ap.add_argument("--no-pallas", action="store_true",
+                        help="use the pure-jnp reference classify kernel")
+        ap.add_argument("--frontier-cap", type=int, default=d.frontier_cap)
+        ap.add_argument("--frontier-cap-max", type=int,
+                        default=d.frontier_cap_max)
+        ap.add_argument("--max-batch", type=int, default=d.max_batch,
+                        help="QuerySession micro-batch ceiling")
+        ap.add_argument("--min-bucket", type=int, default=d.min_bucket,
+                        help="smallest power-of-two padding bucket")
+
+    @classmethod
+    def from_args(cls, args: argparse.Namespace) -> "IndexSpec":
+        variant = args.variant
+        return cls(
+            k=(None if variant == "full" else args.k),
+            variant=variant,
+            c=args.c,
+            cover_method=args.cover_method,
+            n_seeds=args.n_seeds,
+            use_seeds=not args.no_seeds,
+            precondensed=args.precondensed,
+            phase2_mode=args.phase2_mode,
+            n_dense_max=args.n_dense_max,
+            ell_width=args.ell_width,
+            phase2_chunk=args.phase2_chunk,
+            use_pallas=not args.no_pallas,
+            frontier_cap=args.frontier_cap,
+            frontier_cap_max=args.frontier_cap_max,
+            max_batch=args.max_batch,
+            min_bucket=args.min_bucket,
+        )
+
+    def to_cli_args(self) -> list:
+        """Inverse of ``from_args``: an argv that parses back to ``self``."""
+        argv = ["--variant", self.variant]
+        if self.variant != "full":
+            argv += ["--k", str(self.k)]
+        argv += ["--c", str(self.c), "--cover-method", self.cover_method,
+                 "--n-seeds", str(self.n_seeds)]
+        if not self.use_seeds:
+            argv.append("--no-seeds")
+        if self.precondensed:
+            argv.append("--precondensed")
+        argv += ["--phase2", self.phase2_mode,
+                 "--dense-max", str(self.n_dense_max)]
+        if self.ell_width is not None:
+            argv += ["--ell-width", str(self.ell_width)]
+        argv += ["--phase2-chunk", str(self.phase2_chunk)]
+        if not self.use_pallas:
+            argv.append("--no-pallas")
+        argv += ["--frontier-cap", str(self.frontier_cap),
+                 "--frontier-cap-max", str(self.frontier_cap_max),
+                 "--max-batch", str(self.max_batch),
+                 "--min-bucket", str(self.min_bucket)]
+        return argv
+
+
+# ---------------------------------------------------------------- facade --
+
+def build(g, spec: IndexSpec = IndexSpec()):
+    """Build a :class:`~repro.core.ferrari.FerrariIndex` from a spec.
+
+    The one public build entry point: ``core.ferrari.build_index`` remains
+    the implementation, this is the kwarg-soup-free door to it.
+    """
+    from ..core.ferrari import build_index
+    variant = "G" if spec.variant == "full" else spec.variant
+    return build_index(g, k=spec.k, variant=variant, c=spec.c,
+                       cover_method=spec.cover_method, n_seeds=spec.n_seeds,
+                       use_seeds=spec.use_seeds,
+                       precondensed=spec.precondensed)
+
+
+def make_engine(index, spec: IndexSpec = IndexSpec(), *, packed=None,
+                ell=None):
+    """Construct the two-phase device engine described by ``spec``.
+
+    ``packed`` / ``ell`` allow a loaded artifact to skip the host-side
+    re-packing loops (see ``reach.persist``).
+    """
+    from ..core.query_jax import DeviceQueryEngine
+    return DeviceQueryEngine(
+        index, n_dense_max=spec.n_dense_max, phase2_chunk=spec.phase2_chunk,
+        use_pallas=spec.use_pallas, phase2_mode=spec.phase2_mode,
+        ell_width=spec.ell_width, frontier_cap=spec.frontier_cap,
+        frontier_cap_max=spec.frontier_cap_max, packed=packed, ell=ell)

@@ -1,0 +1,248 @@
+"""The repro.reach facade: IndexSpec validation + round-trips, index
+persistence (bit-identical serving on load), QuerySession bucketed
+micro-batching (no retrace after warmup), submit/drain, stats reset."""
+import argparse
+
+import numpy as np
+import pytest
+
+from repro import reach
+from repro.core.query import brute_force_closure
+from repro.core.workload import positive_queries, random_queries
+from repro.graphs.generators import scale_free_digraph
+
+# ---------------------------------------------------------------- IndexSpec
+
+
+@pytest.mark.parametrize("bad", [
+    dict(k=0),
+    dict(k=-3),
+    dict(variant="X"),
+    dict(variant="full"),            # full requires k=None
+    dict(k=None),                    # k=None requires variant='full'
+    dict(c=0),
+    dict(cover_method="nope"),
+    dict(n_seeds=0),
+    dict(phase2_mode="gpu"),
+    dict(n_dense_max=0),
+    dict(ell_width=0),
+    dict(phase2_chunk=0),
+    dict(frontier_cap=0),
+    dict(frontier_cap=1024, frontier_cap_max=512),
+    dict(min_bucket=0),
+    dict(max_batch=128, min_bucket=256),
+])
+def test_spec_validation_rejects(bad):
+    with pytest.raises(ValueError):
+        reach.IndexSpec(**bad)
+
+
+def test_spec_defaults_and_full_variant():
+    assert reach.IndexSpec().k == 2
+    full = reach.IndexSpec(k=None, variant="full")
+    assert full.k is None
+
+
+SPECS = [
+    reach.IndexSpec(),
+    reach.IndexSpec(k=None, variant="full", use_seeds=False),
+    reach.IndexSpec(k=5, variant="L", c=2, cover_method="dp", n_seeds=64,
+                    precondensed=True, phase2_mode="sparse", n_dense_max=1,
+                    ell_width=16, phase2_chunk=128, use_pallas=False,
+                    frontier_cap=512, frontier_cap_max=2048,
+                    max_batch=4096, min_bucket=64),
+]
+
+
+@pytest.mark.parametrize("spec", SPECS)
+def test_spec_dict_roundtrip(spec):
+    assert reach.IndexSpec.from_dict(spec.to_dict()) == spec
+
+
+def test_spec_dict_rejects_unknown_fields():
+    with pytest.raises(ValueError):
+        reach.IndexSpec.from_dict({"k": 2, "warp_drive": True})
+
+
+@pytest.mark.parametrize("spec", SPECS)
+def test_spec_cli_roundtrip(spec):
+    ap = argparse.ArgumentParser()
+    reach.IndexSpec.add_cli_args(ap)
+    parsed = reach.IndexSpec.from_args(ap.parse_args(spec.to_cli_args()))
+    assert parsed == spec
+
+
+def test_spec_cli_defaults_match_dataclass():
+    ap = argparse.ArgumentParser()
+    reach.IndexSpec.add_cli_args(ap)
+    assert reach.IndexSpec.from_args(ap.parse_args([])) == reach.IndexSpec()
+
+
+def test_spec_from_config():
+    from repro.configs.ferrari_web import CONFIG, SMOKE
+    spec = reach.IndexSpec.from_config(SMOKE)       # k_max=4, seed_words=1
+    assert spec.k == 1 and spec.n_seeds == 32
+    spec = reach.IndexSpec.from_config(CONFIG, phase2_mode="sparse")
+    assert spec.k == 2 and spec.phase2_mode == "sparse"
+
+
+# ------------------------------------------------------- persistence (20k+)
+
+
+def test_save_load_roundtrip_bit_identical(tmp_path):
+    """Acceptance: a QuerySession on a loaded artifact answers bit-identically
+    to one on the freshly built index — random + positive workloads, 22k
+    queries, n = 20k nodes, sparse phase-2 actually exercised."""
+    g = scale_free_digraph(20_000, 3.0, seed=11)
+    # weak index (k=1, few seeds) so a real UNKNOWN residue reaches the
+    # sparse frontier engine in both sessions
+    spec = reach.IndexSpec(k=1, variant="L", n_seeds=32,
+                           phase2_mode="sparse", use_pallas=False,
+                           max_batch=8192)
+    ix = reach.build(g, spec)
+    reach.save_index(tmp_path, ix, spec)
+
+    fresh = reach.QuerySession(ix, spec)
+    loaded = reach.QuerySession.load(tmp_path)
+    assert loaded.spec == spec                       # spec travels along
+
+    qs, qt = random_queries(g, 16_000, seed=5)
+    ps, pt = positive_queries(g, 6_000, seed=6)
+    for a, b in ((qs, qt), (ps, pt)):
+        want = fresh.query(a, b)
+        got = loaded.query(a, b)
+        assert np.array_equal(want, got)
+    sf, sl = fresh.stats, loaded.stats
+    assert sf.phase2_sparse > 0                      # sparse engine ran
+    # identical phase mix: the loaded packed/ELL layouts are the same bits
+    for f in ("n_queries", "n_positive", "phase1_pos", "phase1_neg",
+              "phase2_queries", "phase2_sparse", "phase2_host"):
+        assert getattr(sf, f) == getattr(sl, f), f
+
+
+def test_loaded_index_arrays_equal(tmp_path):
+    g = scale_free_digraph(1_000, 3.0, seed=3)
+    spec = reach.IndexSpec(k=2, variant="G")
+    ix = reach.build(g, spec)
+    reach.save_index(tmp_path, ix, spec)
+    art = reach.load_index(tmp_path)
+    assert art.index.k == ix.k and art.index.variant == ix.variant
+    assert np.array_equal(art.index.cond.comp, ix.cond.comp)
+    assert np.array_equal(art.index.tl.pi, ix.tl.pi)
+    assert len(art.index.labels) == len(ix.labels)
+    for a, b in zip(art.index.labels, ix.labels):
+        for x, y in zip(a, b):
+            assert np.array_equal(x, y)
+    assert art.index.n_intervals() == ix.n_intervals()
+    from repro.core.packed import pack_index
+    pk = pack_index(ix)
+    assert np.array_equal(art.packed.begins, pk.begins)
+    assert np.array_equal(art.packed.ends, pk.ends)
+    ell, tsrc, tdst = pk.ell_layout(width=spec.ell_width)
+    assert np.array_equal(art.ell[0], ell)
+    assert np.array_equal(art.ell[1], tsrc)
+    assert np.array_equal(art.ell[2], tdst)
+
+
+def test_load_missing_artifact_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        reach.load_index(tmp_path / "nope")
+
+
+# ------------------------------------------------- session: bucketing/serve
+
+
+def _session(n=800, **spec_kw):
+    g = scale_free_digraph(n, 3.0, seed=0)
+    kw = dict(k=2, variant="G", use_pallas=False, min_bucket=256,
+              max_batch=2048)
+    kw.update(spec_kw)
+    spec = reach.IndexSpec(**kw)
+    return g, reach.QuerySession(reach.build(g, spec), spec)
+
+
+def test_session_no_retrace_after_warmup_100k():
+    """Acceptance: 100k queries through the session, ragged batch sizes —
+    zero phase-1 retraces after each bucket is warm."""
+    g, sess = _session()
+    sess.warmup(2048, 1000, 300, 150)    # buckets 2048, 1024, 512, 256
+    traces = sess.trace_count
+    assert traces == 4
+    rng = np.random.default_rng(9)
+    sizes = [2048, 1000, 300, 777, 150, 2000, 513]
+    served = 0
+    i = 0
+    while served < 100_000:
+        sz = sizes[i % len(sizes)]
+        i += 1
+        qs = rng.integers(0, g.n, sz)
+        qt = rng.integers(0, g.n, sz)
+        sess.query(qs, qt)
+        served += sz
+    assert sess.stats.n_queries == served
+    assert sess.trace_count == traces, "bucketed session retraced!"
+    assert set(sess.stats.buckets) <= {256, 512, 1024, 2048}
+
+
+def test_session_answers_match_bruteforce_across_buckets():
+    g, sess = _session(n=300, min_bucket=64, max_batch=256)
+    tc = brute_force_closure(g)
+    qs, qt = random_queries(g, 1000, seed=2)     # 3 full + 1 padded batch
+    got = sess.query(qs, qt)
+    want = np.array([tc[s, t] for s, t in zip(qs, qt)])
+    assert np.array_equal(got, want)
+    st = sess.stats
+    assert st.n_queries == 1000
+    assert st.n_batches == 4
+    assert st.n_padded == 4 * 256 - 1000
+    assert st.phase1_pos + st.phase1_neg + st.phase2_queries == 1000
+    assert st.n_positive == int(want.sum())
+
+
+def test_session_submit_drain():
+    g, sess = _session(n=300, min_bucket=64, max_batch=256)
+    qs, qt = random_queries(g, 500, seed=4)
+    direct = sess.query(qs, qt)
+    sess.reset_stats()
+    t1 = sess.submit(qs[:100], qt[:100])
+    t2 = sess.submit(qs[100:101], qt[100:101])   # single-query request
+    t3 = sess.submit(qs[101:500], qt[101:500])
+    assert sess.pending_queries == 500
+    res = sess.drain()
+    assert sess.pending_queries == 0
+    assert np.array_equal(res[t1], direct[:100])
+    assert np.array_equal(res[t2], direct[100:101])
+    assert np.array_equal(res[t3], direct[101:500])
+    # 3 requests coalesced into 2 micro-batches (256 + padded 244)
+    assert sess.stats.n_batches == 2
+    assert sess.drain() == {}
+
+
+def test_session_stats_reset_and_engine_reset():
+    g, sess = _session(n=300, min_bucket=64, max_batch=256)
+    qs, qt = random_queries(g, 300, seed=1)
+    sess.query(qs, qt)
+    assert sess.stats.n_queries == 300
+    sess.reset_stats()
+    st = sess.stats
+    assert st.n_queries == 0 and st.n_batches == 0 and st.buckets == {}
+    assert sess.engine.stats.n_queries == 0
+    # engine-level reset (satellite): accumulation across answer() calls
+    # is now clearable between workloads
+    eng = sess.engine
+    eng.answer(qs, qt)
+    assert eng.stats.n_queries == 300
+    eng.stats.reset()
+    assert eng.stats.n_queries == 0
+    from repro.core.query import QueryStats
+    q = QueryStats(n_queries=7, nodes_expanded=3)
+    q.reset()
+    assert q == QueryStats()
+
+
+def test_session_rejects_ragged_input():
+    _, sess = _session(n=300, min_bucket=64, max_batch=256)
+    with pytest.raises(ValueError):
+        sess.query(np.arange(3), np.arange(4))
+    with pytest.raises(ValueError):
+        sess.submit(np.arange(3), np.arange(4))

@@ -1,8 +1,10 @@
 """End-to-end smoke test of launch/serve.py --mode reachability: the served
 positive count must match the host reference engine on the identical
-graph + workload, and the reported phase statistics must be consistent.
+graph + workload, the unified SessionStats must be consistent, and the
+bucketed session must not retrace inside the timed loop.
 """
 import numpy as np
+import pytest
 
 from repro.core.ferrari import build_index
 from repro.core.query import QueryEngine
@@ -20,12 +22,14 @@ def _host_positive_count(n_nodes, avg_deg, n_queries, k, variant, seed,
 
 
 def _check_stats(stats, n_queries, batch):
-    warmup = min(batch, n_queries)
-    assert stats.n_queries == n_queries + warmup
+    # warmup is excluded now: the session stats cover exactly the timed loop
+    assert stats.n_queries == n_queries
     assert (stats.phase1_pos + stats.phase1_neg + stats.phase2_queries
             == stats.n_queries)
     assert (stats.phase2_dense + stats.phase2_sparse + stats.phase2_host
             == stats.phase2_queries)
+    assert stats.n_batches == -(-n_queries // batch)
+    assert sum(stats.buckets.values()) == stats.n_batches
 
 
 def test_serve_reachability_auto_matches_host():
@@ -33,6 +37,10 @@ def test_serve_reachability_auto_matches_host():
     res = serve_reachability(n, 3.0, q, k=2, variant="G", batch=batch, seed=0)
     assert res["positive"] == _host_positive_count(n, 3.0, q, 2, "G", 0)
     _check_stats(res["stats"], q, batch)
+    assert res["stats"].n_positive == res["positive"]
+    # every batch lands in one power-of-two bucket -> exactly one phase-1
+    # trace, including the ragged 1500 % 512 tail
+    assert res["trace_count"] == len(res["stats"].buckets) == 1
 
 
 def test_serve_reachability_sparse_matches_host():
@@ -47,3 +55,27 @@ def test_serve_reachability_sparse_matches_host():
     _check_stats(st, q, batch)
     assert st.phase2_sparse > 0
     assert st.phase2_host == 0
+
+
+def test_serve_reachability_save_then_load(tmp_path):
+    """--index-dir semantics: first call builds + saves, second call loads
+    the artifact and serves the identical positive count."""
+    n, q, batch = 600, 1000, 256
+    d = str(tmp_path / "idx")
+    res1 = serve_reachability(n, 3.0, q, k=2, variant="G", batch=batch,
+                              seed=0, index_dir=d)
+    assert not res1["loaded"]
+    res2 = serve_reachability(n, 3.0, q, k=2, variant="G", batch=batch,
+                              seed=0, index_dir=d)
+    assert res2["loaded"]
+    assert res1["positive"] == res2["positive"]
+
+
+def test_serve_reachability_rejects_mismatched_artifact(tmp_path):
+    """An artifact built over one graph must not silently serve another."""
+    d = str(tmp_path / "idx")
+    serve_reachability(600, 3.0, 200, k=2, variant="G", batch=256, seed=0,
+                      index_dir=d)
+    with pytest.raises(ValueError, match="built over"):
+        serve_reachability(900, 3.0, 200, k=2, variant="G", batch=256,
+                          seed=0, index_dir=d)

@@ -1,0 +1,55 @@
+"""core/workload.py: the §7.2 query workload generators.
+
+``positive_queries`` must actually return reachable pairs (checked against
+the brute-force closure) and both generators must be deterministic per seed.
+"""
+import numpy as np
+
+from repro.core.query import brute_force_closure
+from repro.core.workload import positive_queries, random_queries
+from repro.graphs.generators import (layered_dag, random_dag,
+                                     scale_free_digraph)
+
+
+def test_random_queries_bounds_and_shape():
+    g = scale_free_digraph(500, 3.0, seed=0)
+    qs, qt = random_queries(g, 2000, seed=1)
+    assert qs.shape == qt.shape == (2000,)
+    for a in (qs, qt):
+        assert a.min() >= 0 and a.max() < g.n
+
+
+def test_random_queries_deterministic_per_seed():
+    g = scale_free_digraph(500, 3.0, seed=0)
+    a1, b1 = random_queries(g, 1000, seed=7)
+    a2, b2 = random_queries(g, 1000, seed=7)
+    assert np.array_equal(a1, a2) and np.array_equal(b1, b2)
+    a3, b3 = random_queries(g, 1000, seed=8)
+    assert not (np.array_equal(a1, a3) and np.array_equal(b1, b3))
+
+
+def test_positive_queries_actually_reachable():
+    for g in (scale_free_digraph(300, 3.0, seed=2),
+              layered_dag(300, 15, 2.5, seed=3),
+              random_dag(200, 1.0, seed=4)):        # has sink nodes
+        tc = brute_force_closure(g)
+        qs, qt = positive_queries(g, 800, seed=5)
+        assert qs.shape == qt.shape == (800,)
+        assert all(tc[s, t] for s, t in zip(qs, qt))
+
+
+def test_positive_queries_deterministic_per_seed():
+    g = scale_free_digraph(400, 3.0, seed=1)
+    a1, b1 = positive_queries(g, 500, seed=9)
+    a2, b2 = positive_queries(g, 500, seed=9)
+    assert np.array_equal(a1, a2) and np.array_equal(b1, b2)
+    a3, b3 = positive_queries(g, 500, seed=10)
+    assert not (np.array_equal(a1, a3) and np.array_equal(b1, b3))
+
+
+def test_positive_queries_sinks_yield_self_pairs():
+    """A graph with NO edges: every positive pair degenerates to (s, s)."""
+    g = random_dag(50, 0.0, seed=0)
+    assert g.m == 0
+    qs, qt = positive_queries(g, 100, seed=1)
+    assert np.array_equal(qs, qt)
