@@ -1,0 +1,134 @@
+"""Distributed serving benchmark — ns/query and bytes moved vs device count,
+replicated vs sharded placements (DESIGN.md §3.6), through the repro.reach
+facade. Emits ``BENCH_distributed.json`` (consumed by CI, bench-smoke job).
+
+Runs anywhere: when no accelerator fleet is attached the host platform is
+split into fake devices (``--xla_force_host_platform_device_count``), so
+the collective paths, the padding math, and the placement plumbing are all
+exercised on CPU. The *latency* numbers on fake devices share one socket
+and mostly measure emulation overhead — the perf trajectory that matters
+on CPU is the bytes-moved model (exact, from the layout contracts) plus
+the phase mix; ns/query becomes meaningful on a real TPU/GPU mesh.
+
+Bytes model per query (fused layout, DESIGN.md §3.3/§3.6):
+  * HBM row bytes: one 16 B meta row for each endpoint + one 8·k_max B
+    interval slab row for the source. Sharded over m model shards, each
+    shard touches only the rows it owns: 1/m of that.
+  * ICI (psum) bytes: replicated moves nothing. Sharded compute-at-owner
+    exchanges the 16 B target meta row + the 4 B verdict over the model
+    axis; a ring all-reduce moves 2·(m-1)/m × payload per device.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def _bytes_model(placement: str, m: int, k_max: int):
+    row = 2 * 16 + 8 * k_max            # meta_s + meta_t + slab_s, bytes
+    if placement != "sharded" or m <= 1:
+        return {"hbm_row_bytes_per_query": float(row),
+                "ici_bytes_per_query": 0.0}
+    payload = 16 + 4                    # psum'd meta_t row + verdict
+    return {"hbm_row_bytes_per_query": row / m,
+            "ici_bytes_per_query": payload * 2 * (m - 1) / m}
+
+
+def run_bench_json(out_path: str = "BENCH_distributed.json",
+                   n_nodes: int = 20_000, avg_deg: float = 3.0,
+                   n_queries: int = 50_000, k: int = 1, seed: int = 0):
+    import numpy as np
+
+    from repro.core.packed import pack_index
+    from repro.core.workload import random_queries
+    from repro.graphs.generators import scale_free_digraph
+    from repro.reach import IndexSpec, QuerySession, build
+
+    import jax
+    n_dev = len(jax.devices())
+    print(f"devices: {n_dev}", flush=True)
+
+    g = scale_free_digraph(n_nodes, avg_deg, seed=seed)
+    base = dict(k=k, variant="L", n_seeds=32, phase2_mode="sparse",
+                max_batch=8192)
+    t0 = time.perf_counter()
+    ix = build(g, IndexSpec(**base))
+    build_s = time.perf_counter() - t0
+    packed = pack_index(ix)             # pack once, share across sessions
+    ell = packed.ell_layout()
+    qs, qt = random_queries(g, n_queries, seed=seed + 1)
+
+    configs = [("single", None)]
+    d = 1
+    while d <= n_dev:
+        configs.append(("replicated", (d, 1)))
+        d *= 2
+    m = 2
+    while m <= n_dev:
+        configs.append(("sharded", (1, m)))
+        m *= 2
+    if n_dev >= 8:
+        configs.append(("sharded", (2, n_dev // 2)))   # mixed: data × model
+
+    out = {"n_nodes": int(g.n), "n_edges": int(g.m), "avg_deg": avg_deg,
+           "n_queries": n_queries, "k": k, "k_max": int(packed.k_max),
+           "build_seconds": build_s, "device_count": n_dev, "configs": []}
+    want = None
+    for placement, shape in configs:
+        mesh = None if shape is None else f"{shape[0]}x{shape[1]}"
+        spec = IndexSpec(**base, placement=placement, mesh=mesh)
+        sess = QuerySession(ix, spec, packed=packed, ell=ell)
+        sess.query(qs[:256], qt[:256])          # compile phase 1 + 2
+        sess.warmup(min(n_queries, spec.max_batch),
+                    n_queries % spec.max_batch)
+        t0 = time.perf_counter()
+        ans = sess.query(qs, qt)
+        dt = time.perf_counter() - t0
+        if want is None:
+            want = ans
+        assert np.array_equal(want, ans), f"{placement} {mesh} disagrees!"
+        st = sess.stats
+        m_axis = 1 if shape is None else shape[1]
+        entry = {"placement": placement, "mesh": mesh,
+                 "n_devices": 1 if shape is None else shape[0] * shape[1],
+                 "ns_per_query": dt / n_queries * 1e9,
+                 "phase2_queries": st.phase2_queries,
+                 "sparse_retries": st.sparse_retries,
+                 "trace_count": sess.trace_count,
+                 **_bytes_model(placement, m_axis, packed.k_max)}
+        out["configs"].append(entry)
+        print(f"{placement:10s} mesh={mesh or '-':5s} "
+              f"{entry['ns_per_query']:9.0f} ns/q  "
+              f"ici={entry['ici_bytes_per_query']:5.1f} B/q  "
+              f"hbm_rows={entry['hbm_row_bytes_per_query']:6.1f} B/q",
+              flush=True)
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {out_path}", flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_distributed.json")
+    ap.add_argument("--nodes", type=int, default=20_000)
+    ap.add_argument("--avg-deg", type=float, default=3.0)
+    ap.add_argument("--queries", type=int, default=50_000)
+    ap.add_argument("--k", type=int, default=1)
+    ap.add_argument("--devices", type=int, default=8,
+                    help="fake host devices when no fleet is attached")
+    args = ap.parse_args()
+    # must precede the first jax import anywhere in the process
+    if "xla_force_host_platform_device_count" not in os.environ.get(
+            "XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={args.devices}").strip()
+    run_bench_json(args.json, n_nodes=args.nodes, avg_deg=args.avg_deg,
+                   n_queries=args.queries, k=args.k)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,11 @@ phase-resolution breakdown (paper §7.5 analogue). Pass --index-dir to
 persist the index on the first run and serve from the artifact afterwards.
 
     PYTHONPATH=src python examples/reachability_serve.py [--nodes N]
+
+Scale-out (DESIGN.md §3.6; fake 8 devices on CPU with
+XLA_FLAGS=--xla_force_host_platform_device_count=8):
+
+    ... reachability_serve.py --placement sharded --mesh 2x4
 """
 import argparse
 
@@ -20,8 +25,12 @@ if __name__ == "__main__":
     ap.add_argument("--queries", type=int, default=100_000)
     ap.add_argument("--k", type=int, default=2)
     ap.add_argument("--index-dir", default=None)
+    ap.add_argument("--placement", default="single",
+                    choices=["single", "replicated", "sharded"])
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL")
     args = ap.parse_args()
-    spec = IndexSpec(k=args.k, variant="G")
+    spec = IndexSpec(k=args.k, variant="G", placement=args.placement,
+                     mesh=args.mesh)
     print("== random workload ==")
     serve_reachability(args.nodes, 4.0, args.queries, spec=spec,
                        workload="random", index_dir=args.index_dir)

@@ -1,29 +1,95 @@
-"""Distributed serving of the FERRARI index (§Perf iteration F2).
+"""Distributed serving of the FERRARI index (DESIGN.md §3.6).
 
-Two index placements (DESIGN.md §3):
+Two index placements, both driving the FULL two-phase query pipeline:
 
   * ``replicated`` — every chip holds the whole packed index; queries shard
     over (pod, data); zero collectives. Memory-bound on the full table
     (HloCostAnalysis charges a gather its whole operand, and on a real TPU
     the random-access rows hit the entire working set too).
-  * ``sharded``    — the table rows shard over 'model' (16x memory-capacity
+  * ``sharded``    — the table rows shard over 'model' (memory-capacity
     scaling: web-scale indices larger than one HBM). Each model shard
     gathers the rows it owns for the whole query block, zeroes the rest,
-    and one int32 psum over 'model' reassembles (meta_s, meta_t, slab_s)
-    per query — ~104 B/query of ICI for 16x less HBM touched. Verdicts are
-    then computed locally (identical math to the replicated path).
+    and one int32 psum over 'model' reassembles the rows per query.
+    Verdicts are then computed locally (identical math to the replicated
+    path).
+
+Phase 1 (``classify_sharded``) uses a compute-at-owner split to keep the
+exchange at ~24 B/query. Phase 2 (``expand_frontier_sharded``) runs the
+sparse frontier engine of `kernels.frontier` *inside* shard_map: the
+UNKNOWN residue shards over the data axes — each data shard owns a query
+block and resolves it locally — while every per-step index touch (ELL row
+gather, candidate classification) goes through the same owned-rows + psum
+exchange over 'model'. BFS state (frontier keys, visited bitsets, verdicts)
+is replicated across 'model' within a data row, so the while_loop stays in
+lockstep for the psum group and different data rows run independent trip
+counts.
 
 The exchange is row-granular, so it composes with the Pallas classifier
 (kernels/interval_stab.py) downstream of the psum.
+
+``DistributedQueryEngine`` packages both placements behind the exact
+``DeviceQueryEngine`` interface, so ``reach.QuerySession`` (bucketing,
+stats, persistence) serves multi-device without changes — select it with
+``IndexSpec(placement="replicated"|"sharded", mesh="DATAxMODEL")``.
 """
 from __future__ import annotations
 
+from typing import Optional, Tuple
+
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..kernels import frontier as kfrontier
 from ..kernels import ops as kops
+from ..kernels import ref as kref
 from ..parallel.sharding import shard_map_compat
+from .query_jax import DeviceQueryEngine
+
+PLACEMENTS = ("replicated", "sharded")
+
+
+def parse_mesh(s: str) -> Tuple[int, int]:
+    """Parse a ``'DATAxMODEL'`` mesh string, e.g. ``'4x2'`` → (4, 2)."""
+    parts = str(s).lower().split("x")
+    try:
+        if len(parts) != 2:
+            raise ValueError
+        d, m = int(parts[0]), int(parts[1])
+        if d < 1 or m < 1:
+            raise ValueError
+    except ValueError:
+        raise ValueError(
+            f"mesh must be 'DATAxMODEL' with positive ints, got {s!r}"
+        ) from None
+    return d, m
+
+
+def make_serving_mesh(placement: str,
+                      shape: Optional[Tuple[int, int]] = None) -> jax.sharding.Mesh:
+    """A (data, model) serving mesh over the first data·model devices.
+
+    Defaults: ``replicated`` puts every device on the query ('data') axis;
+    ``sharded`` puts every device on the table-row ('model') axis. Pass an
+    explicit ``shape=(data, model)`` to combine both kinds of parallelism
+    (e.g. ``(2, 4)``: 2-way query sharding × 4-way row sharding).
+    """
+    if placement not in PLACEMENTS:
+        raise ValueError(f"placement must be one of {PLACEMENTS}, "
+                         f"got {placement!r}")
+    devs = jax.devices()
+    if shape is None:
+        shape = (len(devs), 1) if placement == "replicated" else (1, len(devs))
+    d, m = shape
+    if d < 1 or m < 1 or d * m > len(devs):
+        raise ValueError(f"mesh {shape} needs {d * m} devices, "
+                         f"have {len(devs)}")
+    if placement == "replicated" and m != 1:
+        raise ValueError("replicated placement holds whole tables per "
+                         "device: the model axis must be 1")
+    arr = np.asarray(devs[:d * m], dtype=object).reshape(d, m)
+    return jax.sharding.Mesh(arr, ("data", "model"))
 
 
 def _own_rows(table, ids):
@@ -39,14 +105,18 @@ def _own_rows(table, ids):
     return jnp.where(own[:, None], rows, 0)
 
 
+def _qspec(mesh, dp_axes) -> P:
+    dp = tuple(a for a in dp_axes if a in mesh.shape)
+    return P(dp if len(dp) > 1 else (dp[0] if dp else None))
+
+
 def classify_sharded(mesh, state, cs, ct, *, use_pallas: bool = False,
                      dp_axes=("pod", "data")):
     """Classify with the index sharded over 'model' and queries over
-    ``dp_axes``. state: {"slab": [n, 2K], "meta": [n, 5]} (global shapes).
+    ``dp_axes``. state: {"slab": [n, 2K], "meta": [n, 4]} (global shapes).
     Returns verdict [Q] int32 sharded like the queries.
     """
-    dp = tuple(a for a in dp_axes if a in mesh.shape)
-    qspec = P(dp if len(dp) > 1 else (dp[0] if dp else None))
+    qspec = _qspec(mesh, dp_axes)
 
     def kern(slab, meta, cs_loc, ct_loc):
         # §Perf F3: compute-at-owner. Exchanging all three row sets costs
@@ -72,3 +142,188 @@ def classify_sharded(mesh, state, cs, ct, *, use_pallas: bool = False,
         in_specs=(P("model", None), P("model", None), qspec, qspec),
         out_specs=qspec)
     return fn(state["slab"], state["meta"], cs, ct)
+
+
+def expand_frontier_sharded(mesh, slab, meta, ell, tail_src, tail_dst,
+                            is_hub, cs, ct, pad, *, n_nodes: int,
+                            max_steps: int, cap: int,
+                            dp_axes=("pod", "data")):
+    """Sparse phase-2 frontier expansion under both placements.
+
+    The UNKNOWN residue (cs, ct, pad — [Q] with Q divisible by the data
+    axes) shards over ``dp_axes``: each data shard runs the guided BFS of
+    `kernels.frontier.expand_frontier_loop` on its own query block. The ELL
+    slab and the fused classify tables shard over 'model' ([n_nodes-padded
+    rows]); per BFS step the loop's two index touches become owned-rows
+    gathers + int32 psums over 'model' (W·4 B/frontier-node for ELL rows,
+    24 B/candidate for classification). tail_src/tail_dst/is_hub are
+    replicated — the COO heavy tail holds only the edges past the ELL width
+    of the few hub nodes, a vanishing fraction of the index.
+
+    Returns (pos [Q] bool, overflow [Q] bool) sharded like the queries;
+    overflow is the per-data-shard flag broadcast over its block (a scalar
+    out_spec would assert cross-shard equality that does not hold).
+    """
+    qspec = _qspec(mesh, dp_axes)
+
+    def kern(slab_l, meta_l, ell_l, tsrc, tdst, hub, cs_l, ct_l, pad_l):
+        def gather(table, ids):
+            return jax.lax.psum(_own_rows(table, ids), "model")
+
+        def classify(cands, tgts):
+            v = kref.interval_stab_classify_packed_ref(
+                gather(meta_l, cands), gather(meta_l, tgts),
+                gather(slab_l, cands))
+            return jnp.where(cands == tgts, kref.POS, v)
+
+        pos, ovf = kfrontier.expand_frontier_loop(
+            ell_l, tsrc, tdst, hub, cs_l, ct_l, pad_l,
+            n_nodes=n_nodes, max_steps=max_steps, cap=cap,
+            gather_rows=gather, classify=classify)
+        return pos, jnp.full_like(pos, ovf)
+
+    fn = shard_map_compat(
+        kern, mesh=mesh,
+        in_specs=(P("model", None), P("model", None), P("model", None),
+                  P(None), P(None), P(None), qspec, qspec, qspec),
+        out_specs=(qspec, qspec))
+    return fn(slab, meta, ell, tail_src, tail_dst, is_hub, cs, ct, pad)
+
+
+def _pad_rows(a: np.ndarray, n_pad: int, fill=0) -> np.ndarray:
+    """Pad dim 0 to ``n_pad`` rows of ``fill`` (so 'model' divides evenly).
+    Padded rows are unreachable: queries and ELL entries only name real
+    ids, and `_own_rows` clamps before masking."""
+    if a.shape[0] == n_pad:
+        return a
+    out = np.full((n_pad,) + a.shape[1:], fill, dtype=a.dtype)
+    out[: a.shape[0]] = a
+    return out
+
+
+class DistributedQueryEngine(DeviceQueryEngine):
+    """Multi-device two-phase engine: same answers, same interface.
+
+    Subclasses `DeviceQueryEngine` and swaps the two executors:
+
+      phase 1  `classify_sharded`     — queries shard over 'data', table
+               rows over 'model' (compute-at-owner psum reassembly);
+      phase 2  `expand_frontier_sharded` — each data shard resolves the
+               UNKNOWN residue of its own query block with the sparse
+               frontier engine, index touches psum'd over 'model'.
+
+    ``placement="replicated"`` is the same code on a model-axis of 1: every
+    psum degenerates to the identity, each device holds full tables, and
+    only the query stream shards — zero-collective scale-out for indices
+    that fit one device. The driver logic (answer, stats, overflow retry,
+    terminal host fallback, `reach.QuerySession` bucketing) is inherited
+    unchanged, so replicated / sharded / single-device sessions answer
+    bit-identically (asserted in tests/test_distributed_parity.py).
+    """
+
+    def __init__(self, index, *, placement: str = "replicated",
+                 mesh_shape: Optional[Tuple[int, int]] = None,
+                 n_dense_max: int = 8192, phase2_chunk: int = 256,
+                 use_pallas: bool = True, phase2_mode: str = "auto",
+                 ell_width: Optional[int] = None, frontier_cap: int = 4096,
+                 frontier_cap_max: int = 1 << 18, packed=None, ell=None,
+                 dp_axes=("pod", "data")):
+        if placement not in PLACEMENTS:
+            raise ValueError(f"placement must be one of {PLACEMENTS}, "
+                             f"got {placement!r}")
+        if phase2_mode == "auto":
+            phase2_mode = "sparse"     # dense needs the n×n adjacency on
+        if phase2_mode == "dense":     # one chip — exactly what sharding
+            raise ValueError(          # is here to avoid
+                "phase2_mode='dense' is single-device only; "
+                "use 'sparse' (or 'host') under a distributed placement")
+        super().__init__(index, n_dense_max=n_dense_max,
+                         phase2_chunk=phase2_chunk, use_pallas=use_pallas,
+                         phase2_mode=phase2_mode, ell_width=ell_width,
+                         frontier_cap=frontier_cap,
+                         frontier_cap_max=frontier_cap_max,
+                         packed=packed, ell=ell)
+        self.placement = placement
+        self.mesh = make_serving_mesh(placement, mesh_shape)
+        self.dp_axes = dp_axes
+        dp = tuple(a for a in dp_axes if a in self.mesh.shape)
+        self.n_dp = int(np.prod([self.mesh.shape[a] for a in dp])) if dp else 1
+        n_model = int(self.mesh.shape["model"])
+        slab, meta = self.packed.fused_layout()
+        if slab is None:
+            raise ValueError(
+                "distributed serving requires the gather-fused layout "
+                "(single-word seed sets, n < 2^24) — see PackedIndex."
+                "fused_layout")
+        self.n_pad = -(-self.packed.n // n_model) * n_model
+        rows = NamedSharding(self.mesh, P("model", None))
+        self._state = {
+            "slab": jax.device_put(_pad_rows(slab, self.n_pad), rows),
+            "meta": jax.device_put(_pad_rows(meta, self.n_pad), rows),
+        }
+        self._comp_np = self.packed.comp
+        self._ell_dist = None
+        self._classify_exec = jax.jit(self._classify_fn)
+        self._expand_exec = jax.jit(self._expand_fn, static_argnames="cap")
+
+    # ------------------------------------------------------------- executors
+    def _classify_fn(self, slab, meta, cs, ct):
+        return classify_sharded(self.mesh, {"slab": slab, "meta": meta},
+                                cs, ct, use_pallas=self.use_pallas,
+                                dp_axes=self.dp_axes)
+
+    def _expand_fn(self, slab, meta, ell, tsrc, tdst, hub, cs, ct, pad, *,
+                   cap: int):
+        return expand_frontier_sharded(
+            self.mesh, slab, meta, ell, tsrc, tdst, hub, cs, ct, pad,
+            n_nodes=self.n_pad, max_steps=self.max_steps, cap=cap,
+            dp_axes=self.dp_axes)
+
+    # --------------------------------------------------------------- phase 1
+    def classify(self, srcs, dsts):
+        cs = self._comp_np[np.asarray(srcs)].astype(np.int32)
+        ct = self._comp_np[np.asarray(dsts)].astype(np.int32)
+        q = cs.size
+        q_pad = -(-q // self.n_dp) * self.n_dp
+        if q_pad != q:
+            # (0, 0) self-queries: resolved POS in phase 1, stripped below
+            cs = np.concatenate([cs, np.zeros(q_pad - q, np.int32)])
+            ct = np.concatenate([ct, np.zeros(q_pad - q, np.int32)])
+        verdict = self._classify_exec(self._state["slab"],
+                                      self._state["meta"],
+                                      jnp.asarray(cs), jnp.asarray(ct))
+        return verdict[:q], jnp.asarray(cs[:q]), jnp.asarray(ct[:q])
+
+    # --------------------------------------------------------------- phase 2
+    def _ell_sharded(self):
+        """Padded + device-placed ELL state: slab rows over 'model', the
+        COO tail and hub mask replicated. Reuses an injected artifact
+        layout (``reach.persist``) when present."""
+        if self._ell_dist is None:
+            if self._ell_host is not None:
+                ell, tsrc, tdst = self._ell_host
+            else:
+                ell, tsrc, tdst = self.packed.ell_layout(width=self.ell_width)
+            is_hub = np.zeros(self.n_pad, dtype=bool)
+            is_hub[tsrc] = True
+            rows = NamedSharding(self.mesh, P("model", None))
+            rep = NamedSharding(self.mesh, P(None))
+            self._ell_dist = (
+                jax.device_put(_pad_rows(np.ascontiguousarray(ell),
+                                         self.n_pad, fill=-1), rows),
+                jax.device_put(np.asarray(tsrc, np.int32), rep),
+                jax.device_put(np.asarray(tdst, np.int32), rep),
+                jax.device_put(is_hub, rep))
+        return self._ell_dist
+
+    def _phase2_chunk_size(self) -> int:
+        # per-data-shard key packing bound × the number of query shards
+        local = min(self.phase2_chunk, kfrontier.max_batch(self.n_pad))
+        return local * self.n_dp
+
+    def _expand_chunk(self, cs_j, ct_j, pad: np.ndarray, cap: int):
+        ell, tsrc, tdst, is_hub = self._ell_sharded()
+        pos, ovf = self._expand_exec(
+            self._state["slab"], self._state["meta"], ell, tsrc, tdst,
+            is_hub, cs_j, ct_j, jnp.asarray(pad), cap=cap)
+        return np.asarray(pos), bool(np.asarray(ovf).any())

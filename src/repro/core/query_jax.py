@@ -118,8 +118,8 @@ class DeviceQueryEngine:
             raise ValueError(f"unknown phase2_mode {phase2_mode!r}")
         self.index = index
         self.packed: PackedIndex = pack_index(index) if packed is None else packed
-        self.dev = self.packed.to_device()
-        self.comp = jnp.asarray(self.packed.comp)
+        self._dev_cache = None        # lazy: distributed subclasses never
+        self.comp = jnp.asarray(self.packed.comp)  # replicate the full table
         self.use_pallas = use_pallas
         self.phase2_chunk = phase2_chunk
         self.ell_width = ell_width
@@ -147,6 +147,16 @@ class DeviceQueryEngine:
             partial(ops.classify_queries, use_pallas=use_pallas))
 
     # ------------------------------------------------------ lazy structures
+    @property
+    def dev(self) -> dict:
+        """The replicated single-device table dict (PackedIndex.to_device),
+        materialized on first use. DistributedQueryEngine overrides every
+        path that touches it, so a sharded placement never pays for a full
+        replicated copy here."""
+        if self._dev_cache is None:
+            self._dev_cache = self.packed.to_device()
+        return self._dev_cache
+
     @property
     def _host(self) -> QueryEngine:
         if self._host_engine is None:
@@ -231,10 +241,21 @@ class DeviceQueryEngine:
             res[lo:hi] = np.asarray(pos)[:q]
         return res
 
-    def _phase2_sparse(self, cs_u: np.ndarray, ct_u: np.ndarray) -> np.ndarray:
+    def _phase2_chunk_size(self) -> int:
+        """Queries per sparse expansion call (key packing bounds it)."""
+        return min(self.phase2_chunk, ops.frontier_max_batch(self.packed.n))
+
+    def _expand_chunk(self, cs_j, ct_j, pad: np.ndarray, cap: int):
+        """One frontier expansion; returns (pos [chunk] np.bool_, overflow
+        bool). DistributedQueryEngine swaps in the shard_map'd expansion."""
         ell, tsrc, tdst, is_hub = self._ell()
-        n = self.packed.n
-        chunk = min(self.phase2_chunk, ops.frontier_max_batch(n))
+        p, ovf = ops.expand_frontier(
+            self.dev, ell, tsrc, tdst, is_hub, cs_j, ct_j,
+            jnp.asarray(pad), max_steps=self.max_steps, cap=cap)
+        return np.asarray(p), bool(ovf)
+
+    def _phase2_sparse(self, cs_u: np.ndarray, ct_u: np.ndarray) -> np.ndarray:
+        chunk = self._phase2_chunk_size()
         res = np.zeros(cs_u.size, dtype=bool)
         self.stats.phase2_sparse += cs_u.size
         for lo in range(0, cs_u.size, chunk):
@@ -250,11 +271,9 @@ class DeviceQueryEngine:
             cap = max(self.frontier_cap, chunk)
             pos = np.zeros(chunk, bool)
             while True:
-                p, ovf = ops.expand_frontier(
-                    self.dev, ell, tsrc, tdst, is_hub, cs_j, ct_j,
-                    jnp.asarray(pad), max_steps=self.max_steps, cap=cap)
-                pos |= np.asarray(p)
-                if not bool(ovf):
+                p, ovf = self._expand_chunk(cs_j, ct_j, pad, cap)
+                pos |= p
+                if not ovf:
                     break
                 # overflow: POS answers are sound, only non-positives need
                 # the retry — mask them out and rerun with 4x the capacity

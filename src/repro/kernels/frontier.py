@@ -58,21 +58,21 @@ def _bit(v):
     return jnp.uint32(1) << (v & 31).astype(jnp.uint32)
 
 
-@partial(jax.jit, static_argnames=("max_steps", "cap"))
-def expand_frontier(packed_dev: dict, ell, tail_src, tail_dst, is_hub,
-                    cs, ct, pad, *, max_steps: int, cap: int):
-    """Batched guided BFS for one chunk of UNKNOWN queries.
+def expand_frontier_loop(ell, tail_src, tail_dst, is_hub, cs, ct, pad, *,
+                         n_nodes: int, max_steps: int, cap: int,
+                         gather_rows, classify):
+    """The BFS while_loop itself, with the two index touches abstracted.
 
-    ell:       [n, W] int32 (-1 pad); tail_src/tail_dst: [m_t] int32 COO;
-               is_hub: [n] bool, true for nodes with edges in the tail (the
-               O(Q·m_t) tail sweep + its larger sort run under a lax.cond
-               only on steps whose frontier actually contains a hub).
-    cs/ct:     [Q] int32 condensed source/target ids; pad: [Q] bool marks
-               slots that are batch padding (never expanded).
-    Returns (pos [Q] bool, overflow scalar bool). Under overflow, True
-    entries are sound but False entries may be incomplete — retry larger.
+    ``gather_rows(table, ids)`` pulls rows of an [n-rows, W] table by GLOBAL
+    node id and ``classify(cands, tgts)`` returns the phase-1 verdict of
+    candidate nodes vs their query's target. On one device both are plain
+    local takes (see ``expand_frontier``); under the sharded placement
+    (core.distributed) each becomes an owned-rows gather + psum over the
+    'model' axis, so this exact loop also runs inside shard_map with the
+    table rows partitioned. ``n_nodes`` is the GLOBAL node-id space (inside
+    shard_map ``ell.shape[0]`` is only the local shard).
     """
-    n, w = ell.shape
+    n, w = n_nodes, ell.shape[1]
     q = cs.shape[0]
     m_t = int(tail_src.shape[0])
     vbits = key_bits(n)
@@ -111,7 +111,7 @@ def expand_frontier(packed_dev: dict, ell, tail_src, tail_dst, is_hub,
             return jnp.unique(keys, size=cap + 1, fill_value=SENTINEL)
 
         # 1. gather: ELL rows of the compacted frontier
-        nbr = ell[fv]                                       # [cap, W]
+        nbr = gather_rows(ell, fv)                          # [cap, W]
         ell_cq = jnp.broadcast_to(fq[:, None], (cap, w)).reshape(-1)
         ell_cv = nbr.reshape(-1)
         ell_ok = (fvalid[:, None] & (nbr >= 0)).reshape(-1)
@@ -148,7 +148,7 @@ def expand_frontier(packed_dev: dict, ell, tail_src, tail_dst, is_hub,
 
         # 3. classify each candidate against its query's target — the same
         # ref rules as phase 1 (pure jnp, traces inside the while_loop)
-        verdict = ref.classify_packed_dev_ref(packed_dev, nv, ct[nq])
+        verdict = classify(nv, ct[nq])
         pos = pos.at[nq].max(nvalid & (verdict == ref.POS))
 
         # 4. segment-OR the visited bits (deduped ⇒ add of disjoint powers)
@@ -161,3 +161,25 @@ def expand_frontier(packed_dev: dict, ell, tail_src, tail_dst, is_hub,
     _, _, pos, overflow, _ = jax.lax.while_loop(
         cond, body, (front0, visited0, pos0, jnp.bool_(False), jnp.int32(0)))
     return pos, overflow
+
+
+@partial(jax.jit, static_argnames=("max_steps", "cap"))
+def expand_frontier(packed_dev: dict, ell, tail_src, tail_dst, is_hub,
+                    cs, ct, pad, *, max_steps: int, cap: int):
+    """Batched guided BFS for one chunk of UNKNOWN queries (single device).
+
+    ell:       [n, W] int32 (-1 pad); tail_src/tail_dst: [m_t] int32 COO;
+               is_hub: [n] bool, true for nodes with edges in the tail (the
+               O(Q·m_t) tail sweep + its larger sort run under a lax.cond
+               only on steps whose frontier actually contains a hub).
+    cs/ct:     [Q] int32 condensed source/target ids; pad: [Q] bool marks
+               slots that are batch padding (never expanded).
+    Returns (pos [Q] bool, overflow scalar bool). Under overflow, True
+    entries are sound but False entries may be incomplete — retry larger.
+    """
+    return expand_frontier_loop(
+        ell, tail_src, tail_dst, is_hub, cs, ct, pad,
+        n_nodes=ell.shape[0], max_steps=max_steps, cap=cap,
+        gather_rows=lambda table, ids: table[ids],
+        classify=lambda cands, tgts: ref.classify_packed_dev_ref(
+            packed_dev, cands, tgts))

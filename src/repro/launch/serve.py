@@ -6,16 +6,25 @@ Two serving paths, matching the paper's kind (index serving) plus LM decode:
     artifact in seconds), then serve batched query streams through the
     ``repro.reach.QuerySession`` facade — bucketed micro-batching, unified
     SessionStats, no jit retraces after warmup. The production analogue of
-    the paper's §7 query-processing experiments.
+    the paper's §7 query-processing experiments. ``--placement`` scales the
+    session out over every visible device: ``replicated`` shards the query
+    stream (zero collectives), ``sharded`` also shards the index rows over
+    the model axis of ``--mesh`` (DESIGN.md §3.6) — answers stay
+    bit-identical to the single-device engine.
   * lm: prefill + decode loop over a smoke-scale LM (batched requests).
 
     PYTHONPATH=src python -m repro.launch.serve --mode reachability \
         --nodes 20000 --queries 100000 --k 2 --index-dir /tmp/ferrari-idx
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --mode reachability \
+        --index-dir /tmp/ferrari-idx --placement sharded --mesh 2x4
 """
 from __future__ import annotations
 
 import argparse
 import time
+from dataclasses import replace
 from pathlib import Path
 
 import numpy as np
@@ -23,6 +32,8 @@ import numpy as np
 from ..core.workload import positive_queries, random_queries
 from ..graphs.generators import scale_free_digraph
 from ..reach import IndexSpec, QuerySession, build, save_index
+from ..reach.persist import load_manifest
+from ..reach.spec import BUILD_FIELDS
 
 
 def serve_reachability(n_nodes: int, avg_deg: float, n_queries: int,
@@ -55,6 +66,25 @@ def serve_reachability(n_nodes: int, avg_deg: float, n_queries: int,
     t0 = time.perf_counter()
     loaded = False
     if index_dir is not None and any(Path(index_dir).glob("step_*.done")):
+        # build knobs are baked into the artifact — take them from its
+        # manifest (the CLI defaults would silently misreport k/variant/...
+        # in stats otherwise); CLI engine/session/placement knobs still
+        # apply. ell_width additionally adopts the saved value when the
+        # CLI leaves it None, so the persisted ELL layout is reused.
+        saved = load_manifest(index_dir)["extra"].get("spec")
+        if saved is not None:
+            saved_spec = IndexSpec.from_dict(saved)
+            merged = {f: getattr(saved_spec, f) for f in BUILD_FIELDS}
+            if spec.ell_width is None:
+                merged["ell_width"] = saved_spec.ell_width
+            dropped = {f: (getattr(spec, f), v) for f, v in merged.items()
+                       if getattr(spec, f) != v}
+            if dropped:
+                print("note: taking build knobs from the artifact: "
+                      + ", ".join(f"{f}: {cli!r} -> {art!r}"
+                                  for f, (cli, art) in dropped.items()),
+                      flush=True)
+            spec = replace(spec, **merged)
         sess = QuerySession.load(index_dir, spec)
         # an index is only valid for the graph it was built over: answers
         # against any other graph are silently garbage (gather clamping),
@@ -79,10 +109,27 @@ def serve_reachability(n_nodes: int, avg_deg: float, n_queries: int,
         print(f"index built in {t_build:.2f}s: {ix.stats.n_comp} SCCs, "
               f"{ix.stats.total_intervals} intervals "
               f"({ix.byte_size() / 2**20:.1f} MiB)", flush=True)
+        # pack once, share between the artifact and the session — both
+        # pack_index and ell_layout are O(n) host loops. The ELL layout is
+        # only built when something will consume it (a saved artifact, or
+        # a session whose phase 2 resolves to the sparse engine).
+        from ..core.packed import pack_index
+        pk = pack_index(ix)
+        p2 = spec.phase2_mode
+        if p2 == "auto":
+            p2 = ("sparse" if spec.placement != "single"
+                  else ("dense" if pk.n <= spec.n_dense_max else "sparse"))
+        ell = (pk.ell_layout(width=spec.ell_width)
+               if index_dir is not None or p2 == "sparse" else None)
         if index_dir is not None:
-            save_index(index_dir, ix, spec, meta={"graph": graph_meta})
+            save_index(index_dir, ix, spec, meta={"graph": graph_meta},
+                       packed=pk, ell=ell)
             print(f"index saved to {index_dir}", flush=True)
-        sess = QuerySession(ix, spec)
+        sess = QuerySession(ix, spec, packed=pk, ell=ell)
+    if spec.placement != "single":
+        mesh = sess.engine.mesh
+        print(f"placement: {spec.placement} over mesh "
+              f"{dict(mesh.shape)} ({mesh.size} devices)", flush=True)
     print(f"phase-2 engine: {sess.engine.phase2_mode}", flush=True)
     qs, qt = (random_queries if workload == "random"
               else positive_queries)(g, n_queries, seed=seed + 1)

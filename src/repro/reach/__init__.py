@@ -12,17 +12,23 @@ One import gives the whole build → persist → serve pipeline:
     answers = sess.query(srcs, dsts)           # bucketed micro-batches
     print(sess.stats)                          # unified SessionStats
 
+Scale-out is one knob: ``IndexSpec(placement="replicated"|"sharded",
+mesh="DATAxMODEL")`` serves the same artifact over every visible device
+with bit-identical answers (DESIGN.md §3.6; full reference docs/API.md).
+
 The underlying pieces (``core.ferrari.build_index``,
-``core.query_jax.DeviceQueryEngine``) remain importable for low-level use,
-but every driver in ``launch/``, ``benchmarks/`` and ``examples/`` goes
-through this facade.
+``core.query_jax.DeviceQueryEngine``,
+``core.distributed.DistributedQueryEngine``) remain importable for
+low-level use, but every driver in ``launch/``, ``benchmarks/`` and
+``examples/`` goes through this facade.
 """
-from .persist import IndexArtifact, load_index, save_index  # noqa: F401
+from .persist import (IndexArtifact, load_index, load_manifest,  # noqa: F401
+                      save_index)
 from .session import QuerySession, SessionStats             # noqa: F401
 from .spec import IndexSpec, build, make_engine             # noqa: F401
 
 __all__ = [
     "IndexSpec", "build", "make_engine",
-    "save_index", "load_index", "IndexArtifact",
+    "save_index", "load_index", "load_manifest", "IndexArtifact",
     "QuerySession", "SessionStats",
 ]

@@ -61,14 +61,19 @@ def _flatten_labels(labels, n_aug: int):
 
 def save_index(path, index: FerrariIndex, spec: Optional[IndexSpec] = None,
                include_packed: bool = True,
-               meta: Optional[dict] = None) -> Path:
+               meta: Optional[dict] = None,
+               packed: Optional[PackedIndex] = None,
+               ell=None) -> Path:
     """Persist ``index`` (and its serving layouts) under ``path``.
 
     Returns the committed step directory. ``spec`` travels in the manifest
     so ``load_index`` can reconstruct the exact engine configuration;
     ``meta`` is arbitrary JSON-serializable caller context (e.g. which
     graph the index was built over) stored as ``extra["user_meta"]`` —
-    loaders use it to reject artifact/graph mismatches.
+    loaders use it to reject artifact/graph mismatches. ``packed`` /
+    ``ell`` (an (ell, tail_src, tail_dst) tuple) reuse already-built
+    layouts — both are O(n) host loops, so a caller that also serves the
+    fresh index should build them once and share (see launch/serve.py).
     """
     tl, cond = index.tl, index.cond
     n_aug = tl.n + 1
@@ -101,16 +106,30 @@ def save_index(path, index: FerrariIndex, spec: Optional[IndexSpec] = None,
         "user_meta": (meta or {}),
     }
     if include_packed:
-        pk = pack_index(index)
-        ell, tail_src, tail_dst = pk.ell_layout(
-            width=None if spec is None else spec.ell_width)
+        pk = pack_index(index) if packed is None else packed
+        if ell is None:
+            ell = pk.ell_layout(width=None if spec is None else spec.ell_width)
+        ell_slab, tail_src, tail_dst = ell
         state.update({
             "pk_begins": pk.begins, "pk_ends": pk.ends, "pk_exact": pk.exact,
-            "ell": ell, "tail_src": tail_src, "tail_dst": tail_dst,
+            "ell": ell_slab, "tail_src": tail_src, "tail_dst": tail_dst,
         })
         extra["k_max"] = int(pk.k_max)
         extra["max_out_degree"] = int(pk.max_out_degree)
     return save_checkpoint(path, step=0, state=state, extra=extra)
+
+
+def load_manifest(path, step: Optional[int] = None) -> dict:
+    """Read just the JSON manifest of the latest committed artifact.
+
+    Cheap (no array load) — lets callers inspect the stored spec / user
+    metadata before deciding how to open a session (launch/serve.py uses
+    it to take build knobs from the artifact rather than the CLI)."""
+    path = Path(path)
+    step = step if step is not None else latest_step(path)
+    if step is None:
+        raise FileNotFoundError(f"no committed index artifact under {path}")
+    return json.loads((path / f"step_{step}" / "manifest.json").read_text())
 
 
 def _load_arrays(path, step: Optional[int]):

@@ -16,6 +16,11 @@ touching the device — the first step toward async multi-tenant serving.
 ``SessionStats`` unifies the old per-engine ``ServeStats`` (phase mix) with
 the session-level view (batches, buckets, padding, wall-clock, host-DFS
 expansion work).
+
+The executor underneath is whatever ``spec.placement`` selects (see
+``spec.make_engine``): the single-device two-phase engine, or the
+replicated / sharded multi-device one (DESIGN.md §3.6) — bucketing,
+statistics and persistence behave identically, and so do the answers.
 """
 from __future__ import annotations
 
@@ -171,12 +176,22 @@ class QuerySession:
     # ------------------------------------------------------------- warmup
     def warmup(self, *batch_sizes: int) -> None:
         """Trace the buckets the given batch sizes map to (using (0, 0)
-        self-queries), then clear statistics. Phase-2 executors compile
-        lazily on the first real UNKNOWN residue; to warm those too, run a
-        representative real batch and call ``reset_stats()``."""
+        self-queries), then clear statistics. Each size expands to its
+        full-chunk bucket plus its ragged-tail bucket, deduplicated — one
+        trace-and-run per distinct bucket. Phase-2 executors compile
+        lazily on the first real UNKNOWN residue; to warm those too, run
+        a representative real batch and call ``reset_stats()``."""
+        seen = set()
         for sz in batch_sizes:
-            if sz > 0:
-                z = np.zeros(sz, dtype=np.int64)
+            if sz <= 0:
+                continue
+            full, tail = divmod(sz, self.spec.max_batch)
+            for b in ([self.spec.max_batch] if full else []) + \
+                    ([self._bucket(tail)] if tail else []):
+                if b in seen:
+                    continue
+                seen.add(b)
+                z = np.zeros(b, dtype=np.int64)
                 self.query(z, z)
         self.reset_stats()
 

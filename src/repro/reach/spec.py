@@ -19,6 +19,11 @@ from typing import Optional
 VARIANTS = ("L", "G", "full")
 COVER_METHODS = ("greedy", "dp", "topgap")
 PHASE2_MODES = ("auto", "dense", "sparse", "host")
+PLACEMENTS = ("single", "replicated", "sharded")
+# the knobs baked into a built index — immutable once an artifact exists;
+# everything else is a serve-time knob a loader may freely override
+BUILD_FIELDS = ("k", "variant", "c", "cover_method", "n_seeds",
+                "use_seeds", "precondensed")
 
 
 @dataclass(frozen=True)
@@ -51,6 +56,9 @@ class IndexSpec:
     # ------------------------------------------------- session micro-batch
     max_batch: int = 16384
     min_bucket: int = 256
+    # -------------------------------------------- placement (DESIGN.md §3.6)
+    placement: str = "single"       # single | replicated | sharded
+    mesh: Optional[str] = None      # "DATAxMODEL", e.g. "2x4"; None = default
 
     # ------------------------------------------------------------ validate
     def __post_init__(self):
@@ -90,6 +98,25 @@ class IndexSpec:
             raise ValueError("min_bucket must be >= 1")
         if self.max_batch < self.min_bucket:
             raise ValueError("max_batch must be >= min_bucket")
+        if self.placement not in PLACEMENTS:
+            raise ValueError(f"placement must be one of {PLACEMENTS}, "
+                             f"got {self.placement!r}")
+        if self.placement == "single":
+            if self.mesh is not None:
+                raise ValueError("mesh requires placement='replicated' "
+                                 "or 'sharded'")
+        else:
+            if self.phase2_mode == "dense":
+                raise ValueError("phase2_mode='dense' is single-device "
+                                 "only (n×n adjacency); use sparse or host")
+            if self.mesh is not None:
+                from ..core.distributed import parse_mesh
+                d, m = parse_mesh(self.mesh)     # raises on bad format
+                if self.placement == "replicated" and m != 1:
+                    raise ValueError(
+                        "replicated placement holds whole tables per "
+                        "device: mesh model axis must be 1, got "
+                        f"{self.mesh!r}")
 
     # -------------------------------------------------- dict serialization
     def to_dict(self) -> dict:
@@ -159,6 +186,14 @@ class IndexSpec:
                         help="QuerySession micro-batch ceiling")
         ap.add_argument("--min-bucket", type=int, default=d.min_bucket,
                         help="smallest power-of-two padding bucket")
+        ap.add_argument("--placement", default=d.placement,
+                        choices=PLACEMENTS,
+                        help="index placement: single device, replicated "
+                             "(queries shard, zero collectives) or sharded "
+                             "(table rows shard over the model axis)")
+        ap.add_argument("--mesh", default=d.mesh, metavar="DATAxMODEL",
+                        help="serving mesh shape, e.g. 2x4 (default: all "
+                             "devices on one axis per --placement)")
 
     @classmethod
     def from_args(cls, args: argparse.Namespace) -> "IndexSpec":
@@ -180,6 +215,8 @@ class IndexSpec:
             frontier_cap_max=args.frontier_cap_max,
             max_batch=args.max_batch,
             min_bucket=args.min_bucket,
+            placement=args.placement,
+            mesh=args.mesh,
         )
 
     def to_cli_args(self) -> list:
@@ -203,7 +240,10 @@ class IndexSpec:
         argv += ["--frontier-cap", str(self.frontier_cap),
                  "--frontier-cap-max", str(self.frontier_cap_max),
                  "--max-batch", str(self.max_batch),
-                 "--min-bucket", str(self.min_bucket)]
+                 "--min-bucket", str(self.min_bucket),
+                 "--placement", self.placement]
+        if self.mesh is not None:
+            argv += ["--mesh", self.mesh]
         return argv
 
 
@@ -225,14 +265,24 @@ def build(g, spec: IndexSpec = IndexSpec()):
 
 def make_engine(index, spec: IndexSpec = IndexSpec(), *, packed=None,
                 ell=None):
-    """Construct the two-phase device engine described by ``spec``.
+    """Construct the two-phase engine described by ``spec``.
 
-    ``packed`` / ``ell`` allow a loaded artifact to skip the host-side
-    re-packing loops (see ``reach.persist``).
+    ``spec.placement`` picks the executor: ``"single"`` is the one-device
+    ``DeviceQueryEngine``; ``"replicated"`` / ``"sharded"`` build a
+    ``DistributedQueryEngine`` over a (data, model) mesh (``spec.mesh``,
+    default all local devices on one axis) — same interface, bit-identical
+    answers. ``packed`` / ``ell`` allow a loaded artifact to skip the
+    host-side re-packing loops (see ``reach.persist``).
     """
-    from ..core.query_jax import DeviceQueryEngine
-    return DeviceQueryEngine(
-        index, n_dense_max=spec.n_dense_max, phase2_chunk=spec.phase2_chunk,
+    common = dict(
+        n_dense_max=spec.n_dense_max, phase2_chunk=spec.phase2_chunk,
         use_pallas=spec.use_pallas, phase2_mode=spec.phase2_mode,
         ell_width=spec.ell_width, frontier_cap=spec.frontier_cap,
         frontier_cap_max=spec.frontier_cap_max, packed=packed, ell=ell)
+    if spec.placement == "single":
+        from ..core.query_jax import DeviceQueryEngine
+        return DeviceQueryEngine(index, **common)
+    from ..core.distributed import DistributedQueryEngine, parse_mesh
+    shape = None if spec.mesh is None else parse_mesh(spec.mesh)
+    return DistributedQueryEngine(index, placement=spec.placement,
+                                  mesh_shape=shape, **common)

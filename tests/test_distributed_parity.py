@@ -1,0 +1,150 @@
+"""Distributed serving parity: replicated and sharded sessions must answer
+bit-identically to the single-device engine (DESIGN.md §3.6), including a
+sharded session opened on a persisted artifact.
+
+Runs in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8
+(the parent pytest process has already initialized jax with one device)."""
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+TEMPLATE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+{body}
+"""
+
+
+def run_with_devices(body: str):
+    r = subprocess.run(
+        [sys.executable, "-c", TEMPLATE.format(body=body)],
+        capture_output=True, text=True, timeout=900,
+        env={**os.environ, "PYTHONPATH": str(SRC)})
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    return r.stdout
+
+
+def test_placements_bit_identical_and_artifact_load():
+    """n = 20k, 8 fake devices: single vs replicated (8x1) vs sharded (2x4)
+    on random + positive workloads, with a real sparse phase-2 residue; a
+    sharded QuerySession.load of the saved artifact answers identically and
+    its phase mix matches (same bits end to end)."""
+    with tempfile.TemporaryDirectory() as tmp:
+        out = run_with_devices(r"""
+from repro import reach
+from repro.core.workload import positive_queries, random_queries
+from repro.graphs.generators import scale_free_digraph
+
+assert len(jax.devices()) == 8
+g = scale_free_digraph(20_000, 3.0, seed=11)
+# weak index (k=1) so an UNKNOWN residue actually reaches phase 2
+base = dict(k=1, variant="L", n_seeds=32, phase2_mode="sparse",
+            max_batch=8192)
+spec = reach.IndexSpec(**base)
+ix = reach.build(g, spec)
+reach.save_index(r'%(tmp)s', ix, spec)
+
+qs, qt = random_queries(g, 16_000, seed=5)
+ps, pt = positive_queries(g, 6_000, seed=6)
+
+sessions = {
+    "single": reach.QuerySession(ix, spec),
+    "replicated": reach.QuerySession(
+        ix, reach.IndexSpec(**base, placement="replicated", mesh="8x1")),
+    "sharded": reach.QuerySession(
+        ix, reach.IndexSpec(**base, placement="sharded", mesh="2x4")),
+    "sharded-loaded": reach.QuerySession.load(
+        r'%(tmp)s', reach.IndexSpec(**base, placement="sharded",
+                                    mesh="4x2")),
+}
+answers = {}
+for name, sess in sessions.items():
+    a = sess.query(qs, qt)
+    b = sess.query(ps, pt)
+    assert b.all(), f"{name}: positive workload not all-positive"
+    answers[name] = (a, b)
+    assert sess.stats.phase2_sparse > 0, f"{name}: phase 2 never ran"
+    assert sess.stats.phase2_host == 0, f"{name}: host fallback"
+
+want = answers["single"]
+for name in ("replicated", "sharded", "sharded-loaded"):
+    for w, g_ in zip(want, answers[name]):
+        np.testing.assert_array_equal(w, g_, err_msg=name)
+
+# identical phase mix everywhere: the same verdict math ran on the same bits
+ss = {n: s.stats for n, s in sessions.items()}
+for f in ("n_queries", "n_positive", "phase1_pos", "phase1_neg",
+          "phase2_queries", "phase2_sparse"):
+    vals = {n: getattr(st, f) for n, st in ss.items()}
+    assert len(set(vals.values())) == 1, (f, vals)
+print("DIST_PARITY_OK")
+""" % {"tmp": tmp})
+    assert "DIST_PARITY_OK" in out
+
+
+def test_sharded_overflow_retry_matches_host():
+    """A tiny frontier cap forces the overflow -> retry-4x path under the
+    sharded placement; answers must still match the single-device engine."""
+    out = run_with_devices(r"""
+from repro import reach
+from repro.core.workload import positive_queries
+from repro.graphs.generators import layered_dag
+
+g = layered_dag(4096, 16, 3.0, seed=3)     # deep: long BFS expansions
+base = dict(k=1, variant="L", n_seeds=8, phase2_mode="sparse",
+            phase2_chunk=64, frontier_cap=64, frontier_cap_max=1 << 14)
+ix = reach.build(g, reach.IndexSpec(**base))
+qs, qt = positive_queries(g, 2_000, seed=4)
+
+single = reach.QuerySession(ix, reach.IndexSpec(**base))
+shard = reach.QuerySession(
+    ix, reach.IndexSpec(**base, placement="sharded", mesh="2x4"))
+want = single.query(qs, qt)
+got = shard.query(qs, qt)
+np.testing.assert_array_equal(want, got)
+assert want.all()
+print("retries:", single.stats.sparse_retries, shard.stats.sparse_retries)
+print("DIST_OVERFLOW_OK")
+""")
+    assert "DIST_OVERFLOW_OK" in out
+
+
+def test_serving_mesh_validation():
+    out = run_with_devices(r"""
+from repro.core.distributed import make_serving_mesh, parse_mesh
+
+assert parse_mesh("2x4") == (2, 4)
+for bad in ("2", "2x", "x4", "0x8", "ax2", "2x4x1"):
+    try:
+        parse_mesh(bad)
+    except ValueError:
+        pass
+    else:
+        raise AssertionError(bad)
+
+m = make_serving_mesh("replicated")
+assert dict(m.shape) == {"data": 8, "model": 1}
+m = make_serving_mesh("sharded")
+assert dict(m.shape) == {"data": 1, "model": 8}
+m = make_serving_mesh("sharded", (2, 2))     # subset of devices is fine
+assert m.size == 4
+try:
+    make_serving_mesh("replicated", (2, 4))
+except ValueError:
+    pass
+else:
+    raise AssertionError("replicated with model=4 must be rejected")
+try:
+    make_serving_mesh("sharded", (4, 4))
+except ValueError:
+    pass
+else:
+    raise AssertionError("16 devices on an 8-device host must be rejected")
+print("MESH_VALIDATION_OK")
+""")
+    assert "MESH_VALIDATION_OK" in out

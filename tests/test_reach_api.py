@@ -31,6 +31,12 @@ from repro.graphs.generators import scale_free_digraph
     dict(frontier_cap=1024, frontier_cap_max=512),
     dict(min_bucket=0),
     dict(max_batch=128, min_bucket=256),
+    dict(placement="multihost"),
+    dict(mesh="2x4"),                         # mesh requires a placement
+    dict(placement="sharded", mesh="2y4"),    # not DATAxMODEL
+    dict(placement="sharded", mesh="0x8"),
+    dict(placement="replicated", mesh="2x4"),  # replicated: model must be 1
+    dict(placement="sharded", phase2_mode="dense"),
 ])
 def test_spec_validation_rejects(bad):
     with pytest.raises(ValueError):
@@ -51,6 +57,9 @@ SPECS = [
                     ell_width=16, phase2_chunk=128, use_pallas=False,
                     frontier_cap=512, frontier_cap_max=2048,
                     max_batch=4096, min_bucket=64),
+    reach.IndexSpec(placement="replicated"),
+    reach.IndexSpec(k=1, variant="L", phase2_mode="sparse",
+                    placement="sharded", mesh="2x4"),
 ]
 
 
