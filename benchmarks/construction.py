@@ -1,7 +1,30 @@
-"""Paper Table 3a / 6b: index construction time per method per dataset."""
+"""Paper Table 3a / 6b: index construction time per method per dataset —
+plus the staged device pipeline's build telemetry.
+
+Two outputs:
+
+  * ``run()``     — the legacy CSV rows (host FERRARI-L/G, GRAIL, Interval).
+  * ``run_bench_json()`` — BENCH_build.json: per dataset, build seconds for
+    the host sweep AND the wavefront device pipeline, with the DESIGN.md §2
+    contract quantities (host-fallback count, peak slab bytes, hub nodes,
+    merge rounds); plus a hub-stress entry whose peak working set is
+    compared against the pre-refactor global-max-degree allocation.
+
+    PYTHONPATH=src python -m benchmarks.construction \
+        --json BENCH_build.json --datasets go-like,human-like
+"""
 from __future__ import annotations
 
-from .common import BENCH_GRAPHS, SMALL, LARGE, WEB, Timer, emit, get_graph, quick_mode
+import argparse
+import json
+
+import numpy as np
+
+from .common import (BENCH_GRAPHS, LARGE, SMALL, WEB, Timer, emit,
+                     get_graph, quick_mode)
+
+HUB_STRESS_N = 20_000
+HUB_STRESS_DEG = 3_000
 
 
 def run(datasets=None, k: int = 2, d_grail: int = 2):
@@ -36,5 +59,106 @@ def run(datasets=None, k: int = 2, d_grail: int = 2):
     return results
 
 
+def hub_stress_graph(n: int = HUB_STRESS_N, hub_deg: int = HUB_STRESS_DEG):
+    """The wave shape the refactor targets: a POPULOUS wave containing one
+    hub page. Sources (first half of ids) link to random sinks (second
+    half); source 0 additionally links to ``hub_deg`` distinct sinks, so
+    every source shares the hub's blevel wave — under the pre-refactor
+    rule the hub's padded degree sized that whole wave's merge buffer."""
+    from repro.graphs.csr import build_csr
+    rng = np.random.default_rng(0)
+    n_src = n // 2
+    m = int(n * 1.5)
+    src = rng.integers(0, n_src, size=m, dtype=np.int64)
+    dst = rng.integers(n_src, n, size=m, dtype=np.int64)
+    tgt = rng.choice(np.arange(n_src, n, dtype=np.int64), size=hub_deg,
+                     replace=False)
+    return build_csr(n, np.concatenate([src, np.zeros(hub_deg, np.int64)]),
+                     np.concatenate([dst, tgt]))
+
+
+def _build_pair(g, k: int):
+    """Host sweep + wavefront device build of the same graph, measured."""
+    from repro import reach
+    dev_spec = reach.IndexSpec(k=k, variant="G", cover_method="topgap",
+                               builder="wavefront")
+    host_spec = reach.IndexSpec(k=k, variant="G", cover_method="topgap",
+                                builder="host")
+    with Timer() as t:
+        hx = reach.build(g, host_spec)
+    host_s = t.seconds
+    with Timer() as t:
+        dx = reach.build(g, dev_spec)
+    st = dx.stats
+    return {
+        "n": int(g.n), "m": int(g.m), "k": k,
+        "host_build_seconds": host_s,
+        "device_build_seconds": t.seconds,
+        "host_fallbacks": int(st.host_fallbacks),
+        "peak_slab_bytes": int(st.peak_slab_bytes),
+        "hub_nodes": int(st.hub_nodes),
+        "merge_rounds": int(st.merge_rounds),
+        "host_intervals": int(hx.stats.total_intervals),
+        "device_intervals": int(st.total_intervals),
+    }, dx
+
+
+def run_bench_json(json_path: str, datasets=None, k: int = 2,
+                   hub_n: int = HUB_STRESS_N,
+                   hub_deg: int = HUB_STRESS_DEG) -> dict:
+    from repro.core.build import prior_peak_slab_bytes
+    datasets = datasets or ("go-like", "human-like")
+    out = {"k": k, "datasets": {}, "hub_stress": {}}
+    for name in datasets:
+        row, _ = _build_pair(get_graph(name), k)
+        out["datasets"][name] = row
+        emit(f"build/{name}/device", row["device_build_seconds"] * 1e6,
+             f"fallbacks={row['host_fallbacks']};"
+             f"peak_slab={row['peak_slab_bytes']}")
+
+    g = hub_stress_graph(hub_n, hub_deg)
+    row, dx = _build_pair(g, k)
+    # the yardsticks this pipeline replaced (core.build.pipeline): "wave"
+    # replays the immediate pre-refactor rule (each wave padded to its own
+    # max degree, no fit/hub split), "global" the monolithic builder's
+    # global-max-degree slab — peak_slab_bytes must beat both
+    w_out = 4 * k                                     # variant G slack c*k
+    blevel = dx.tl.blevel[: dx.tl.n]
+    deg = dx.cond.dag.degrees()
+    row["prior_alloc_bytes"] = prior_peak_slab_bytes(deg, blevel, w_out,
+                                                     scope="wave")
+    row["prior_global_alloc_bytes"] = prior_peak_slab_bytes(
+        deg, blevel, w_out, scope="global")
+    row["hub_deg"] = hub_deg
+    out["hub_stress"] = row
+    emit("build/hub-stress/device", row["device_build_seconds"] * 1e6,
+         f"peak_slab={row['peak_slab_bytes']};"
+         f"prior_alloc={row['prior_alloc_bytes']}")
+
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    print(f"# wrote {json_path}", flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="emit BENCH_build.json instead of the CSV table")
+    ap.add_argument("--datasets", default=None,
+                    help="comma-separated dataset names")
+    ap.add_argument("--k", type=int, default=2)
+    ap.add_argument("--hub-n", type=int, default=HUB_STRESS_N)
+    ap.add_argument("--hub-deg", type=int, default=HUB_STRESS_DEG)
+    args, _ = ap.parse_known_args()
+    datasets = (tuple(args.datasets.split(","))
+                if args.datasets else None)
+    if args.json:
+        run_bench_json(args.json, datasets, k=args.k,
+                       hub_n=args.hub_n, hub_deg=args.hub_deg)
+    else:
+        run(datasets, k=args.k)
+
+
 if __name__ == "__main__":
-    run()
+    main()

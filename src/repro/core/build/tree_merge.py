@@ -1,0 +1,146 @@
+"""Chunked tree-reduction merge — hub fan-in without hub-sized buffers.
+
+A node of out-degree d needs a merge over d·W + 1 interval slots; one hub
+node used to dictate the working width of its whole wave (and web-scale
+hubs made the single-shot buffer unbuildable on device). Here fan-in above
+the working-width cap is reduced as a tree instead (DESIGN.md §2):
+
+    round 1:  children rows, chunks of ``chunk`` → merge+cover(≤ W) each
+    round r:  chunks of ``chunk`` partial rows   → merge+cover(≤ W) each
+    ...until one row per node remains.
+
+Every round is one `merge_cover_rows` call with the CONSTANT static width
+``m = chunk·W + 1``, so the kernel compiles once per build regardless of
+the hub degree, the slab is bounded by (#groups)·m instead of B·(d_max·W),
+and ⌈log_chunk d⌉ rounds replace the O(d·W) scan of the single-shot path.
+
+Quality model: each intermediate cover is a sound over-approximation (the
+union only ever grows into gap fill-ins marked approximate; exactness is
+kept only where provably exact), so the final label covers exactly the
+same reachable set — answers are unchanged, only the UNKNOWN residue that
+phase 2 resolves may differ. The tree interval joins the node's FIRST
+chunk in round 1, matching the host merge's concat order within that chunk.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from .merge_kernels import merge_cover_rows, slab_bytes
+
+_INV32 = np.int32(2**31 - 1)
+
+
+@dataclass
+class MergeStats:
+    """Accounting shared by both pipeline stages (see pipeline.py).
+
+    ``host_fallbacks`` is structurally zero today — the staged pipeline
+    has NO host escape path left. The counter exists as the persisted
+    contract (BuildStats / manifest / BENCH_build.json): any future code
+    that reintroduces a host merge path MUST increment it, and the CI
+    gate ``host_fallbacks == 0`` turns into a real regression check.
+    """
+    hub_nodes: int = 0
+    merge_rounds: int = 0
+    host_fallbacks: int = 0
+    peak_slab_bytes: int = 0
+    kernel_calls: int = 0
+
+    def record(self, n_rows: int, m: int) -> None:
+        self.kernel_calls += 1
+        self.peak_slab_bytes = max(self.peak_slab_bytes,
+                                   slab_bytes(n_rows, m))
+
+
+def _pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length() if x > 1 else 1
+
+
+def plan_chunks(counts: np.ndarray, chunk: int):
+    """Chunk schedule for one reduction round.
+
+    ``counts[i]``: how many source rows node i currently holds. Returns
+    (n_groups per node, group start offsets) — node i owns groups
+    ``[starts[i], starts[i] + n_groups[i])`` of the round.
+    """
+    n_groups = -(-counts // chunk)          # ceil div
+    starts = np.zeros(counts.size + 1, dtype=np.int64)
+    np.cumsum(n_groups, out=starts[1:])
+    return n_groups, starts
+
+
+def reduce_wave(begins, ends, exact, hubs: np.ndarray,
+                indptr: np.ndarray, indices: np.ndarray,
+                tree_b: np.ndarray, tree_e: np.ndarray,
+                w_out: int, chunk: int, stats: MergeStats):
+    """Tree-reduce every hub node of one wave; all hubs advance in lockstep.
+
+    ``begins/ends/exact [n+1, W]``: the global label table (row n = dummy).
+    ``hubs``: node ids whose fan-in exceeds the single-shot cap.
+    ``tree_b/tree_e``: per-hub tree intervals (joined in round 1, chunk 0).
+    Returns (nb, ne, nx, ncnt) slabs of shape [len(hubs), w_out].
+    """
+    h = hubs.size
+    n_dummy = begins.shape[0] - 1
+    m = chunk * w_out + 1
+
+    # ---- round 1: children rows out of the global table ------------------
+    deg = (indptr[hubs + 1] - indptr[hubs]).astype(np.int64)
+    n_groups, starts = plan_chunks(deg, chunk)
+    g_total = int(starts[-1])
+    g_pad = _pow2(g_total)
+    group_idx = np.full((g_pad, chunk), n_dummy, dtype=np.int64)
+    eb = np.full(g_pad, _INV32, dtype=np.int32)
+    ee = np.full(g_pad, -1, dtype=np.int32)
+    for i, v in enumerate(hubs):
+        row = indices[indptr[v]: indptr[v + 1]]
+        base = int(starts[i])
+        for j in range(int(n_groups[i])):
+            seg = row[j * chunk: (j + 1) * chunk]
+            group_idx[base + j, : seg.size] = seg
+        eb[base] = tree_b[i]
+        ee[base] = tree_e[i]
+
+    stats.hub_nodes += h
+    stats.merge_rounds += 1
+    stats.record(g_pad, m)
+    sb, se, sx, _ = merge_cover_rows(
+        begins, ends, exact, jnp.asarray(group_idx),
+        jnp.asarray(eb), jnp.asarray(ee), k=w_out, w_out=w_out, m=m)
+
+    # ---- rounds 2..R: chunks of partial rows out of the scratch table ----
+    counts = n_groups
+    while int(counts.max(initial=1)) > 1:
+        n_groups, starts = plan_chunks(counts, chunk)
+        g_total = int(starts[-1])
+        g_pad = _pow2(g_total)
+        scratch_rows = sb.shape[0]
+        group_idx = np.full((g_pad, chunk), scratch_rows, dtype=np.int64)
+        prev_starts = np.zeros(h + 1, dtype=np.int64)
+        np.cumsum(counts, out=prev_starts[1:])
+        for i in range(h):
+            src = np.arange(prev_starts[i], prev_starts[i + 1])
+            base = int(starts[i])
+            for j in range(int(n_groups[i])):
+                seg = src[j * chunk: (j + 1) * chunk]
+                group_idx[base + j, : seg.size] = seg
+        # append the dummy row the pad slots point at
+        tb = jnp.concatenate([sb, jnp.full((1, w_out), _INV32, jnp.int32)])
+        te = jnp.concatenate([se, jnp.full((1, w_out), -1, jnp.int32)])
+        tx = jnp.concatenate([sx, jnp.zeros((1, w_out), bool)])
+        no_extra_b = jnp.full(g_pad, _INV32, jnp.int32)
+        no_extra_e = jnp.full(g_pad, -1, jnp.int32)
+        stats.merge_rounds += 1
+        stats.record(g_pad, m)
+        sb, se, sx, scnt = merge_cover_rows(
+            tb, te, tx, jnp.asarray(group_idx), no_extra_b, no_extra_e,
+            k=w_out, w_out=w_out, m=m)
+        counts = n_groups
+
+    # one partial per hub: rows 0..h-1 of the final scratch (starts[i] == i)
+    final_cnt = jnp.minimum(
+        jnp.sum(sb[:h] < _INV32, axis=1), w_out).astype(jnp.int32)
+    return sb[:h], se[:h], sx[:h], final_cnt

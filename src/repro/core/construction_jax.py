@@ -1,279 +1,19 @@
-"""Level-synchronous (wavefront) FERRARI construction on device.
+"""Import-compat shim — the device constructor now lives in ``core.build``.
 
-Beyond-paper: the paper's Algorithm 2 sweep is sequential in reverse
-topological order. The only true data dependence is node → successors, and
-successors always live at strictly smaller *backward levels* — so nodes of
-equal blevel are independent and merge/cover in one vmapped batch
-(DESIGN.md §3). Buffers are fixed-width slabs [n, W] (W = c·k slots), the
-same layout the serving kernel consumes — construction output IS the
-packed index, no re-packing.
-
-Semantics: identical to the host `assign_intervals(variant="L",
-cover_method="topgap")` whenever a node's merge fan-in fits the working
-width (deg·W+1 ≤ m_cap — asserted; chunked hierarchical merging for larger
-fan-in is the documented quality-degrading fallback, disabled by default).
-Cover method is top-gap (one sort) — quality vs paper-greedy measured in
-benchmarks/cover_quality.
-
-Variant "G-posthoc": nodes keep ≤ c·k intervals during the sweep; after all
-levels, lowest-out-degree oversized nodes are re-covered to k until the
-global budget holds (same budget semantics as Alg. 3; parents saw the
-RICHER c·k sets, so label quality ≥ the paper's in-sweep draining).
+The monolithic per-level loop that used to live here became the staged
+pipeline of ``repro.core.build`` (PLAN → WAVES → DRAIN, DESIGN.md §2):
+``build/merge_kernels.py`` holds the row merge/cover kernels,
+``build/tree_merge.py`` the chunked tree-reduction merge that keeps
+web-scale hub fan-in on device, and ``build/pipeline.py`` the wave driver,
+per-level slab sizing, and the variant-"G" drain. Every public name keeps
+resolving from here.
 """
-from __future__ import annotations
+from .build import (INVALID, WavefrontIndex,  # noqa: F401
+                    build_index_device, build_wavefront,
+                    labels_from_wavefront, merge_cover_rows)
+from .build.merge_kernels import (_merge_sorted_row,  # noqa: F401
+                                  _topgap_cover_row)
+from .build.pipeline import _drain_to_budget  # noqa: F401
 
-from dataclasses import dataclass
-from functools import partial
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from ..graphs.csr import CSR
-from .tree_cover import TreeLabels, build_tree_labels
-
-INVALID = jnp.int32(2**31 - 1)
-
-
-# ------------------------------------------------------------ row kernels --
-
-def _merge_sorted_row(b, e, x):
-    """Union-merge one begin-sorted row of (possibly INVALID) intervals.
-
-    Mirrors intervals._sweep exactly: exact-coverage tracking via
-    (ece, holed); touching intervals merge only when type-preserving.
-    Returns (ob, oe, ox, count) with merged intervals packed to the front.
-    """
-    m = b.shape[0]
-
-    def step(carry, i):
-        cb, ce, ece, holed, cnt, ob, oe, ox = carry
-        bi, ei, xi = b[i], e[i], x[i] != 0
-        valid = bi < INVALID
-        opened = cnt >= 0          # a current interval exists
-        cur_exact = jnp.logical_and(~holed, ece >= ce)
-
-        # decide: merge into current vs flush + open new
-        touching = bi == ce + 1
-        overlap = bi <= ce
-        type_ok = cur_exact == xi
-        do_merge = opened & valid & (overlap | (touching & type_ok))
-        do_open = valid & ~do_merge
-
-        # --- merge path
-        ce_m = jnp.maximum(ce, ei)
-        ece_m = jnp.where(xi & (bi <= ece + 1), jnp.maximum(ece, ei), ece)
-        holed_m = holed | (xi & (bi > ece + 1))
-
-        # --- flush path (write current interval at slot cnt)
-        slot = jnp.maximum(cnt, 0)
-        ob_f = ob.at[slot].set(jnp.where(do_open & opened, cb, ob[slot]))
-        oe_f = oe.at[slot].set(jnp.where(do_open & opened, ce, oe[slot]))
-        ox_f = ox.at[slot].set(jnp.where(do_open & opened,
-                                         cur_exact, ox[slot]))
-        cnt_new = jnp.where(do_open, jnp.where(opened, cnt + 1, 0), cnt)
-
-        cb_n = jnp.where(do_open, bi, cb)
-        ce_n = jnp.where(do_open, ei, jnp.where(do_merge, ce_m, ce))
-        ece_n = jnp.where(do_open, jnp.where(xi, ei, bi - 1),
-                          jnp.where(do_merge, ece_m, ece))
-        # holed only on irreparable exact-coverage gaps (see intervals._sweep)
-        holed_n = jnp.where(do_open, False,
-                            jnp.where(do_merge, holed_m, holed))
-        return (cb_n, ce_n, ece_n, holed_n, cnt_new, ob_f, oe_f, ox_f), None
-
-    init = (jnp.int32(0), jnp.int32(-1), jnp.int32(-2), jnp.bool_(True),
-            jnp.int32(-1),
-            jnp.full((m,), INVALID, jnp.int32),
-            jnp.full((m,), -1, jnp.int32),
-            jnp.zeros((m,), jnp.bool_))
-    (cb, ce, ece, holed, cnt, ob, oe, ox), _ = jax.lax.scan(
-        step, init, jnp.arange(m))
-    # final flush
-    opened = cnt >= 0
-    slot = jnp.maximum(cnt, 0)
-    cur_exact = jnp.logical_and(~holed, ece >= ce)
-    ob = ob.at[slot].set(jnp.where(opened, cb, ob[slot]))
-    oe = oe.at[slot].set(jnp.where(opened, ce, oe[slot]))
-    ox = ox.at[slot].set(jnp.where(opened, cur_exact, ox[slot]))
-    return ob, oe, ox, cnt + 1
-
-
-def _topgap_cover_row(ob, oe, ox, cnt, k: int, w_out: int):
-    """Top-gap (k-1 largest gaps) cover of a merged row; emit ≤ min(k, w_out)
-    intervals into a width-w_out slab. Ties keep the leftmost gap (stable)."""
-    m = ob.shape[0]
-    idx = jnp.arange(m)
-    valid = idx < cnt
-    gap_valid = idx + 1 < cnt                       # gap i between I_i, I_{i+1}
-    gaps = jnp.where(gap_valid, ob[jnp.minimum(idx + 1, m - 1)] - oe - 1, -1)
-    order = jnp.argsort(-gaps, stable=True)
-    ranks = jnp.zeros(m, jnp.int32).at[order].set(jnp.arange(m, dtype=jnp.int32))
-    keep = (ranks < (k - 1)) & gap_valid
-    grp = jnp.concatenate([jnp.zeros(1, jnp.int32),
-                           jnp.cumsum(keep.astype(jnp.int32))[:-1]])
-    grp = jnp.where(valid, grp, w_out)              # park invalid slots
-    nb = jax.ops.segment_min(jnp.where(valid, ob, INVALID), grp,
-                             num_segments=w_out + 1)[:w_out]
-    ne = jax.ops.segment_max(jnp.where(valid, oe, -1), grp,
-                             num_segments=w_out + 1)[:w_out]
-    sz = jax.ops.segment_sum(valid.astype(jnp.int32), grp,
-                             num_segments=w_out + 1)[:w_out]
-    anyx = jax.ops.segment_max(
-        jnp.where(valid, ox, False).astype(jnp.int32), grp,
-        num_segments=w_out + 1)[:w_out]
-    nx = (sz == 1) & (anyx > 0)
-    nb = jnp.where(sz > 0, nb, INVALID)
-    ne = jnp.where(sz > 0, ne, -1)
-    return nb.astype(jnp.int32), ne.astype(jnp.int32), nx, jnp.minimum(cnt, k)
-
-
-@partial(jax.jit, static_argnames=("k", "w_out", "m"))
-def _process_level(begins, ends, exact, succ_idx, tree_b, tree_e,
-                   k: int, w_out: int, m: int):
-    """One wavefront step. succ_idx: [B, D] successor ids (n = dummy row);
-    tree_b/e: [B] tree intervals. Returns per-node slabs [B, w_out]."""
-    B, D = succ_idx.shape
-    W = begins.shape[1]
-    cb = begins[succ_idx].reshape(B, D * W)
-    ce = ends[succ_idx].reshape(B, D * W)
-    cx = exact[succ_idx].reshape(B, D * W)
-    # tree interval FIRST — matches the host merge_many concat order so the
-    # stable begin-sort visits equal-begin intervals identically
-    cb = jnp.concatenate([tree_b[:, None], cb], axis=1)
-    ce = jnp.concatenate([tree_e[:, None], ce], axis=1)
-    cx = jnp.concatenate([jnp.ones((B, 1), cx.dtype), cx], axis=1)
-    # pad/truncate to the working width m (callers assert fit)
-    if cb.shape[1] < m:
-        pad = m - cb.shape[1]
-        cb = jnp.pad(cb, ((0, 0), (0, pad)), constant_values=INVALID)
-        ce = jnp.pad(ce, ((0, 0), (0, pad)), constant_values=-1)
-        cx = jnp.pad(cx, ((0, 0), (0, pad)))
-    order = jnp.argsort(cb, axis=1, stable=True)
-    cb = jnp.take_along_axis(cb, order, 1)
-    ce = jnp.take_along_axis(ce, order, 1)
-    cx = jnp.take_along_axis(cx, order, 1)
-
-    def row(b, e, x):
-        ob, oe, ox, cnt = _merge_sorted_row(b, e, x)
-        return _topgap_cover_row(ob, oe, ox, cnt, k, w_out)
-
-    nb, ne, nx, ncnt = jax.vmap(row)(cb, ce, cx.astype(jnp.int32))
-    return nb, ne, nx, ncnt
-
-
-# ---------------------------------------------------------------- builder --
-
-@dataclass
-class WavefrontIndex:
-    begins: np.ndarray      # [n+1, W] (row n = dummy/empty)
-    ends: np.ndarray
-    exact: np.ndarray
-    counts: np.ndarray
-    tl: TreeLabels
-    k: int
-    levels: int
-    seconds: float = 0.0
-
-
-def build_wavefront(dag: CSR, tl: Optional[TreeLabels] = None, k: int = 2,
-                    c: int = 4, variant: str = "L",
-                    budget: Optional[int] = None) -> WavefrontIndex:
-    """Device wavefront construction over blevel waves (sinks first)."""
-    import time
-    t0 = time.perf_counter()
-    n = dag.n
-    if tl is None:
-        tl = build_tree_labels(dag)
-    w_out = k if variant == "L" else c * k
-    blevel = tl.blevel[:n]
-    order = np.argsort(blevel, kind="stable")
-    bounds = np.searchsorted(blevel[order], np.arange(blevel.max() + 2))
-    deg = dag.degrees()
-    max_m = int((deg.max(initial=0)) * w_out + 1)
-
-    begins = jnp.full((n + 1, w_out), INVALID, jnp.int32)
-    ends = jnp.full((n + 1, w_out), -1, jnp.int32)
-    exact = jnp.zeros((n + 1, w_out), jnp.bool_)
-    counts = np.zeros(n + 1, dtype=np.int32)
-
-    tree_b_all = tl.tbegin[:n].astype(np.int32)
-    tree_e_all = tl.pi[:n].astype(np.int32)
-    indptr, indices = dag.indptr, dag.indices
-
-    n_levels = int(blevel.max(initial=0)) + 1
-    for lv in range(n_levels):
-        nodes = order[bounds[lv]: bounds[lv + 1]]
-        if nodes.size == 0:
-            continue
-        d_lv = int(deg[nodes].max(initial=0))
-        # bucket (B, D) to powers of two so jit recompiles O(log² n) times
-        d_pad = max(1, 1 << max(d_lv - 1, 0).bit_length()) if d_lv > 0 else 1
-        b_pad = 1 << max(nodes.size - 1, 0).bit_length()
-        succ = np.full((b_pad, d_pad), n, dtype=np.int64)
-        for i, v in enumerate(nodes):
-            row = indices[indptr[v]: indptr[v + 1]]
-            succ[i, : row.size] = row
-        tb = np.full(b_pad, np.int32(2**31 - 1), dtype=np.int32)
-        te = np.full(b_pad, -1, dtype=np.int32)
-        tb[: nodes.size] = tree_b_all[nodes]
-        te[: nodes.size] = tree_e_all[nodes]
-        m_pad = d_pad * w_out + 1
-        nb, ne, nx, ncnt = _process_level(
-            begins, ends, exact, jnp.asarray(succ),
-            jnp.asarray(tb), jnp.asarray(te),
-            k=w_out, w_out=w_out, m=m_pad)
-        nodes_j = jnp.asarray(np.concatenate(
-            [nodes, np.full(b_pad - nodes.size, n, dtype=np.int64)]))
-        begins = begins.at[nodes_j].set(nb)
-        ends = ends.at[nodes_j].set(ne)
-        exact = exact.at[nodes_j].set(nx)
-        counts[nodes] = np.asarray(ncnt)[: nodes.size]
-
-    ix = WavefrontIndex(begins=np.array(begins), ends=np.array(ends),
-                        exact=np.array(exact), counts=counts, tl=tl, k=k,
-                        levels=n_levels)
-
-    if variant == "G":
-        _drain_to_budget(ix, dag, k, budget or k * n)
-    ix.seconds = time.perf_counter() - t0
-    return ix
-
-
-def _drain_to_budget(ix: WavefrontIndex, dag: CSR, k: int, budget: int):
-    """Post-hoc global draining: re-cover lowest-out-degree oversized nodes
-    to ≤ k until the total fits the budget (Alg. 3 semantics, deferred)."""
-    from . import cover as cov
-    from . import intervals as iv
-    total = int(ix.counts[:-1].sum())
-    if total <= budget:
-        return
-    deg = dag.degrees()
-    oversized = np.flatnonzero(ix.counts[:-1] > k)
-    for v in oversized[np.argsort(deg[oversized], kind="stable")]:
-        c = int(ix.counts[v])
-        s = iv.make_set(ix.begins[v, :c], ix.ends[v, :c], ix.exact[v, :c])
-        cv = cov.cover(s, k, method="topgap")
-        nc = iv.size(cv)
-        ix.begins[v, :] = INVALID
-        ix.ends[v, :] = -1
-        ix.exact[v, :] = False
-        ix.begins[v, :nc] = cv[0]
-        ix.ends[v, :nc] = cv[1]
-        ix.exact[v, :nc] = cv[2]
-        total += nc - c
-        ix.counts[v] = nc
-        if total <= budget:
-            break
-
-
-def labels_from_wavefront(ix: WavefrontIndex):
-    """Per-node IntervalSets (for equivalence tests vs the host build)."""
-    from . import intervals as iv
-    out = []
-    for v in range(ix.tl.n):
-        c = int(ix.counts[v])
-        out.append(iv.make_set(ix.begins[v, :c], ix.ends[v, :c],
-                               ix.exact[v, :c]))
-    return out
+# historical name of the wave kernel (pre-refactor private API)
+_process_level = merge_cover_rows

@@ -14,8 +14,10 @@ Three algorithms, selectable everywhere via ``method=``:
                  cover, iteratively keep the gap with the greatest cost
                  reduction until k-1 gaps are kept.
   * ``topgap`` — beyond-paper TPU-friendly variant: keep the k-1 largest
-                 gaps (one sort, no iteration). Used by the wavefront device
-                 constructor; quality measured in benchmarks/cover_quality.
+                 gaps (one sort, no iteration). The cover of the staged
+                 device pipeline (``core/build/``): every wave merge, every
+                 tree-reduction round's re-cover, and the variant-"G" drain
+                 (DESIGN.md §2); quality measured in benchmarks/cover_quality.
 
 Cost model (Eq. 20-21): a result interval spanning originals i..j costs 0 if
 i == j and η_i = 1, else (β_j - α_i + 1).

@@ -11,7 +11,8 @@ Faithful host-side implementation of:
     (the paper's "Interval" baseline, §6/§7).
 
 This module is the *paper-faithful baseline* recorded in EXPERIMENTS.md §Perf;
-`construction_jax.py` holds the beyond-paper wavefront device build.
+`core/build/` holds the beyond-paper staged device pipeline (wavefront waves
++ chunked tree-reduction merge for hub fan-in, DESIGN.md §2).
 """
 from __future__ import annotations
 
@@ -43,6 +44,12 @@ class BuildStats:
     seconds_tree: float = 0.0
     seconds_assign: float = 0.0
     seconds_seeds: float = 0.0
+    # staged device pipeline (core.build) — zeros for the host sweep
+    builder: str = "host"
+    hub_nodes: int = 0                   # nodes merged by tree reduction
+    merge_rounds: int = 0                # total merge kernel rounds
+    host_fallbacks: int = 0              # fan-ins sent back to the host
+    peak_slab_bytes: int = 0             # largest merge working set
 
     @property
     def seconds_total(self) -> float:

@@ -122,6 +122,20 @@ def post_order(parent: np.ndarray, n: int) -> tuple[np.ndarray, np.ndarray, CSR]
     return pi, tbegin, tree
 
 
+def wavefront_schedule(blevel: np.ndarray):
+    """Wave schedule for the staged device constructor (DESIGN.md §2).
+
+    Groups nodes into backward-level waves, sinks (blevel 0) first — every
+    node's successors live at strictly smaller blevels, so each wave only
+    reads results of earlier waves. Returns ``(order, bounds)``: wave ``lv``
+    is ``order[bounds[lv]:bounds[lv + 1]]``; ``len(bounds) - 1`` waves.
+    """
+    order = np.argsort(blevel, kind="stable")
+    bounds = np.searchsorted(blevel[order],
+                             np.arange(blevel.max(initial=0) + 2))
+    return order, bounds
+
+
 def build_tree_labels(g: CSR) -> TreeLabels:
     """Full §2/§4.2.1 pipeline over a condensed DAG ``g``."""
     n = g.n

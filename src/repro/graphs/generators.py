@@ -72,6 +72,19 @@ def scale_free_digraph(n: int, avg_deg: float, seed: int = 0,
     return build_csr(n, s, d)
 
 
+def add_hub_edges(g: CSR, hub_deg: int, seed: int = 0, hub: int = 0) -> CSR:
+    """Return ``g`` plus a web-style hub: node ``hub`` gains edges to
+    ``hub_deg`` distinct random targets (the fan-in shape that exercises
+    the tree-reduction merge of the device constructor, DESIGN.md §2)."""
+    rng = np.random.default_rng(seed)
+    pool = np.delete(np.arange(g.n, dtype=np.int64), hub)
+    tgt = rng.choice(pool, size=hub_deg, replace=False)
+    s, d = g.edges()
+    return build_csr(g.n, np.concatenate([s.astype(np.int64),
+                                          np.full(hub_deg, hub, np.int64)]),
+                     np.concatenate([d.astype(np.int64), tgt]))
+
+
 def random_tree(n: int, seed: int = 0, max_parent_gap: int = 64) -> CSR:
     """Random rooted tree (node 0 = root), edges parent -> child."""
     rng = np.random.default_rng(seed)

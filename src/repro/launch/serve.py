@@ -2,8 +2,10 @@
 
 Two serving paths, matching the paper's kind (index serving) plus LM decode:
 
-  * reachability: obtain a FERRARI index (build it, or load a persisted
-    artifact in seconds), then serve batched query streams through the
+  * reachability: obtain a FERRARI index (build it — ``--builder host``
+    or the staged ``wavefront`` device pipeline with tree-reduction merge
+    fan-in, DESIGN.md §2 — or load a persisted artifact in seconds), then
+    serve batched query streams through the
     ``repro.reach.QuerySession`` facade — bucketed micro-batching, unified
     SessionStats, no jit retraces after warmup. The production analogue of
     the paper's §7 query-processing experiments. ``--placement`` scales the
@@ -106,9 +108,17 @@ def serve_reachability(n_nodes: int, avg_deg: float, n_queries: int,
     else:
         ix = build(g, spec)
         t_build = time.perf_counter() - t0
-        print(f"index built in {t_build:.2f}s: {ix.stats.n_comp} SCCs, "
+        print(f"index built in {t_build:.2f}s ({spec.builder}): "
+              f"{ix.stats.n_comp} SCCs, "
               f"{ix.stats.total_intervals} intervals "
               f"({ix.byte_size() / 2**20:.1f} MiB)", flush=True)
+        if spec.builder == "wavefront":
+            # the DESIGN.md §2 contract: hub fan-in stays on device
+            print(f"wavefront build: {ix.stats.hub_nodes} hub nodes, "
+                  f"{ix.stats.merge_rounds} merge rounds, "
+                  f"{ix.stats.host_fallbacks} host fallbacks, "
+                  f"peak slab {ix.stats.peak_slab_bytes / 2**20:.1f} MiB",
+                  flush=True)
         # pack once, share between the artifact and the session — both
         # pack_index and ell_layout are O(n) host loops. The ELL layout is
         # only built when something will consume it (a saved artifact, or

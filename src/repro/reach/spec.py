@@ -18,12 +18,14 @@ from typing import Optional
 
 VARIANTS = ("L", "G", "full")
 COVER_METHODS = ("greedy", "dp", "topgap")
+BUILDERS = ("host", "wavefront")
 PHASE2_MODES = ("auto", "dense", "sparse", "host")
 PLACEMENTS = ("single", "replicated", "sharded")
 # the knobs baked into a built index — immutable once an artifact exists;
 # everything else is a serve-time knob a loader may freely override
 BUILD_FIELDS = ("k", "variant", "c", "cover_method", "n_seeds",
-                "use_seeds", "precondensed")
+                "use_seeds", "precondensed", "builder", "merge_chunk",
+                "m_cap")
 
 
 @dataclass(frozen=True)
@@ -45,6 +47,12 @@ class IndexSpec:
     n_seeds: int = 32
     use_seeds: bool = True
     precondensed: bool = False
+    # --------------------------------------- builder (DESIGN.md §2 pipeline)
+    builder: str = "host"           # host sweep | wavefront device pipeline
+    merge_chunk: int = 64           # tree-reduction fan-in per merge round
+    m_cap: Optional[int] = None     # max merge working width (slots); None
+    #                                 keeps fan-in <= SINGLE_SHOT_DEG on the
+    #                                 bit-identical single-shot path
     # ------------------------------------------------- engine (phase 1 + 2)
     phase2_mode: str = "auto"
     n_dense_max: int = 8192
@@ -81,6 +89,30 @@ class IndexSpec:
                              f"got {self.cover_method!r}")
         if self.use_seeds and self.n_seeds < 1:
             raise ValueError("use_seeds=True requires n_seeds >= 1")
+        if self.builder not in BUILDERS:
+            raise ValueError(f"builder must be one of {BUILDERS}, "
+                             f"got {self.builder!r}")
+        if self.merge_chunk < 2:
+            raise ValueError("merge_chunk must be >= 2 (the tree reduction "
+                             "must shrink the partial count every round)")
+        if self.builder == "wavefront":
+            if self.variant == "full":
+                raise ValueError("builder='wavefront' supports variants "
+                                 "'L'/'G'; the k=None full baseline is "
+                                 "host-only")
+            if self.cover_method != "topgap":
+                raise ValueError("builder='wavefront' covers with the "
+                                 "one-sort 'topgap' method only, got "
+                                 f"{self.cover_method!r}")
+            # m_cap must admit chunks of >= 2 rows at this slab width
+            w_out = self.k if self.variant == "L" else self.c * self.k
+            if self.m_cap is not None and self.m_cap < 2 * w_out + 1:
+                raise ValueError(
+                    f"m_cap={self.m_cap} is narrower than two slab rows + "
+                    f"the tree interval at width W={w_out}; need >= "
+                    f"{2 * w_out + 1}")
+        elif self.m_cap is not None and self.m_cap < 3:
+            raise ValueError(f"m_cap must be >= 3, got {self.m_cap}")
         if self.phase2_mode not in PHASE2_MODES:
             raise ValueError(f"phase2_mode must be one of {PHASE2_MODES}, "
                              f"got {self.phase2_mode!r}")
@@ -168,6 +200,17 @@ class IndexSpec:
                         help="disable seed labels (§5.1)")
         ap.add_argument("--precondensed", action="store_true",
                         help="input is already a DAG: skip Tarjan")
+        ap.add_argument("--builder", default=d.builder, choices=BUILDERS,
+                        help="host = paper-faithful sweep; wavefront = "
+                             "staged device pipeline (requires "
+                             "--cover-method topgap)")
+        ap.add_argument("--merge-chunk", type=int, default=d.merge_chunk,
+                        help="tree-reduction merge fan-in per round "
+                             "(wavefront builder, DESIGN.md §2)")
+        ap.add_argument("--m-cap", type=int, default=d.m_cap,
+                        help="max merge working width in interval slots "
+                             "(default: fan-in up to 256 children merges "
+                             "single-shot, hubs above tree-reduce)")
         ap.add_argument("--phase2", default=d.phase2_mode,
                         choices=PHASE2_MODES, dest="phase2_mode",
                         help="phase-2 engine: auto = dense for n <= "
@@ -206,6 +249,9 @@ class IndexSpec:
             n_seeds=args.n_seeds,
             use_seeds=not args.no_seeds,
             precondensed=args.precondensed,
+            builder=args.builder,
+            merge_chunk=args.merge_chunk,
+            m_cap=args.m_cap,
             phase2_mode=args.phase2_mode,
             n_dense_max=args.n_dense_max,
             ell_width=args.ell_width,
@@ -230,6 +276,10 @@ class IndexSpec:
             argv.append("--no-seeds")
         if self.precondensed:
             argv.append("--precondensed")
+        argv += ["--builder", self.builder,
+                 "--merge-chunk", str(self.merge_chunk)]
+        if self.m_cap is not None:
+            argv += ["--m-cap", str(self.m_cap)]
         argv += ["--phase2", self.phase2_mode,
                  "--dense-max", str(self.n_dense_max)]
         if self.ell_width is not None:
@@ -252,9 +302,20 @@ class IndexSpec:
 def build(g, spec: IndexSpec = IndexSpec()):
     """Build a :class:`~repro.core.ferrari.FerrariIndex` from a spec.
 
-    The one public build entry point: ``core.ferrari.build_index`` remains
-    the implementation, this is the kwarg-soup-free door to it.
+    ``spec.builder`` picks the constructor: ``"host"`` is the
+    paper-faithful sweep (``core.ferrari.build_index``); ``"wavefront"``
+    is the staged device pipeline (``core.build.build_index_device``) —
+    per-level-sized wave merges plus the chunked tree-reduction for hub
+    fan-in (DESIGN.md §2), governed by ``merge_chunk`` / ``m_cap``.
+    Either way this is the kwarg-soup-free door.
     """
+    if spec.builder == "wavefront":
+        from ..core.build import build_index_device
+        return build_index_device(
+            g, k=spec.k, variant=spec.variant, c=spec.c,
+            cover_method=spec.cover_method, n_seeds=spec.n_seeds,
+            use_seeds=spec.use_seeds, precondensed=spec.precondensed,
+            merge_chunk=spec.merge_chunk, m_cap=spec.m_cap)
     from ..core.ferrari import build_index
     variant = "G" if spec.variant == "full" else spec.variant
     return build_index(g, k=spec.k, variant=variant, c=spec.c,

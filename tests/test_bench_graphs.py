@@ -1,0 +1,71 @@
+"""benchmarks/common.py real-graph loaders: parsers, cache behaviour,
+deterministic synthetic fallback when offline."""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks import common  # noqa: E402
+
+
+def test_parse_gra_with_header():
+    g = common.parse_gra("graph_for_greach\n4\n0: 1 2 #\n1: 3 #\n2: #\n3: #\n")
+    assert g.n == 4 and g.m == 3
+    assert g.neighbors(0).tolist() == [1, 2]
+
+
+def test_parse_gra_without_header_and_blank_lines():
+    g = common.parse_gra("\n3\n0: 1 #\n\n1: 2 #\n2: #\n")
+    assert g.n == 3 and g.m == 2
+
+
+def test_parse_edgelist_skips_comments():
+    g = common.parse_edgelist("# SNAP header\n% konect\n0 1\n1 2\n2 0\n")
+    assert g.n == 3 and g.m == 3
+
+
+def test_real_graph_offline_falls_back_deterministically(tmp_path,
+                                                         monkeypatch):
+    monkeypatch.setenv("REPRO_GRAPH_CACHE", str(tmp_path))
+    monkeypatch.setattr(common, "_fetch",
+                        lambda url, timeout=20.0: (_ for _ in ()).throw(
+                            OSError("offline")))
+    a = common.load_real_graph("pubmed", verbose=False)
+    b = common.load_real_graph("pubmed", verbose=False)
+    assert a.n == b.n and np.array_equal(a.indices, b.indices)
+    # the fallback is the documented synthetic analogue
+    ref = common.BENCH_GRAPHS[common.REAL_GRAPHS["pubmed"]["fallback"]]()
+    assert a.n == ref.n and np.array_equal(a.indices, ref.indices)
+    assert not list(tmp_path.glob("*.npz"))       # fallbacks are not cached
+
+
+def test_real_graph_cache_roundtrip(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_GRAPH_CACHE", str(tmp_path))
+    served = {"count": 0}
+
+    def fake_fetch(url, timeout=20.0):
+        served["count"] += 1
+        return "2\n0: 1 #\n1: #\n"
+
+    monkeypatch.setattr(common, "_fetch", fake_fetch)
+    g = common.load_real_graph("go", verbose=False)
+    assert g.n == 2 and g.m == 1
+    assert (tmp_path / "go.npz").exists()
+    # second load is a pure cache read — no fetch
+    g2 = common.load_real_graph("go", verbose=False)
+    assert served["count"] == 1
+    assert g2.n == g.n and np.array_equal(g2.indices, g.indices)
+
+
+def test_get_graph_dispatches_real_names(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_GRAPH_CACHE", str(tmp_path))
+    monkeypatch.setattr(common, "_fetch",
+                        lambda url, timeout=20.0: (_ for _ in ()).throw(
+                            OSError("offline")))
+    common._GRAPH_CACHE.clear()
+    g = common.get_graph("go")
+    assert g.n == common.BENCH_GRAPHS["go-like"]().n
+    common._GRAPH_CACHE.clear()

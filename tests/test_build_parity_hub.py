@@ -1,0 +1,88 @@
+"""Acceptance: a web-scale-style hub graph (n=50k, max out-degree far above
+the single-shot cap m_cap/W) builds END-TO-END on device — zero host
+fallbacks — and the resulting index answers a 20k-query parity suite
+identically (reach-set equality) to the host reference builder, including
+after a save/load round-trip through reach.save_index/load_index."""
+import numpy as np
+import pytest
+
+from repro import reach
+from repro.core.build import effective_widths, prior_peak_slab_bytes
+from repro.core.workload import positive_queries, random_queries
+from repro.graphs.generators import add_hub_edges, scale_free_digraph
+
+N = 50_000
+HUB_DEG = 5_000
+N_QUERIES = 20_000
+
+SPEC_DEV = reach.IndexSpec(k=2, variant="G", cover_method="topgap",
+                           builder="wavefront", phase2_mode="sparse")
+SPEC_HOST = reach.IndexSpec(k=2, variant="G", cover_method="topgap",
+                            builder="host", phase2_mode="sparse")
+
+
+@pytest.fixture(scope="module")
+def hub_graph():
+    """Scale-free digraph (SCCs included) plus one web-style hub page
+    linking to 5k targets — out-degree far above m_cap/W."""
+    return add_hub_edges(scale_free_digraph(N, 1.5, seed=42, back_p=0.2),
+                         HUB_DEG, seed=7)
+
+
+@pytest.fixture(scope="module")
+def device_index(hub_graph):
+    return reach.build(hub_graph, SPEC_DEV)
+
+
+@pytest.fixture(scope="module")
+def queries(hub_graph):
+    rs, rt = random_queries(hub_graph, N_QUERIES // 2, seed=1)
+    ps, pt = positive_queries(hub_graph, N_QUERIES - N_QUERIES // 2, seed=2)
+    return np.concatenate([rs, ps]), np.concatenate([rt, pt])
+
+
+@pytest.fixture(scope="module")
+def host_answers(hub_graph, queries):
+    ix = reach.build(hub_graph, SPEC_HOST)
+    sess = reach.QuerySession(ix, SPEC_HOST)
+    return sess.query(*queries)
+
+
+def test_hub_builds_on_device_zero_fallbacks(hub_graph, device_index):
+    st = device_index.stats
+    # the hub truly exceeded the single-shot cap
+    w_out = SPEC_DEV.c * SPEC_DEV.k
+    m_cap, _ = effective_widths(w_out, SPEC_DEV.merge_chunk, SPEC_DEV.m_cap)
+    assert int(device_index.cond.dag.degrees().max()) > (m_cap - 1) // w_out
+    assert st.builder == "wavefront"
+    assert st.hub_nodes >= 1, "hub never took the tree-reduction path"
+    assert st.host_fallbacks == 0
+    assert st.merge_rounds >= 2
+    # per-level sizing: peak working set below the monolithic builder's
+    # global-max-degree slab (core.build.prior_peak_slab_bytes)
+    blevel = device_index.tl.blevel[: device_index.tl.n]
+    deg = device_index.cond.dag.degrees()
+    assert st.peak_slab_bytes > 0
+    assert st.peak_slab_bytes < prior_peak_slab_bytes(deg, blevel, w_out,
+                                                      scope="global")
+
+
+def test_device_index_parity_20k_queries(device_index, host_answers, queries):
+    sess = reach.QuerySession(device_index, SPEC_DEV)
+    ans = sess.query(*queries)
+    assert ans.shape == host_answers.shape
+    mism = int((ans != host_answers).sum())
+    assert mism == 0, f"{mism}/{ans.size} answers differ from host build"
+    assert int(ans.sum()) >= N_QUERIES // 4          # positives actually ran
+
+
+def test_saved_device_index_parity_after_roundtrip(tmp_path_factory,
+                                                   device_index,
+                                                   host_answers, queries):
+    path = tmp_path_factory.mktemp("hub-idx")
+    reach.save_index(path, device_index, SPEC_DEV)
+    loaded = reach.QuerySession.load(path)
+    assert loaded.spec.builder == "wavefront"        # spec travelled along
+    assert loaded.index.stats.host_fallbacks == 0
+    ans = loaded.query(*queries)
+    assert (ans == host_answers).all()

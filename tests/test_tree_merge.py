@@ -1,0 +1,150 @@
+"""Chunked tree-reduction merge (core.build, DESIGN.md §2): schedule,
+width policy, soundness of reduced labels, per-level slab sizing."""
+import numpy as np
+import pytest
+
+from repro.core import intervals as iv
+from repro.core.build import (build_wavefront, effective_widths,
+                              labels_from_wavefront, plan_chunks,
+                              prior_peak_slab_bytes)
+from repro.core.ferrari import build_index
+from repro.core.query import QueryEngine, brute_force_closure
+from repro.graphs.generators import add_hub_edges, layered_dag, random_dag
+
+# --------------------------------------------------------------- planning
+
+
+def test_plan_chunks_schedule():
+    counts = np.array([7, 1, 64, 65, 128])
+    ng, starts = plan_chunks(counts, 64)
+    assert ng.tolist() == [1, 1, 1, 2, 2]
+    assert starts.tolist() == [0, 1, 2, 3, 5, 7]
+
+
+def test_effective_widths_policy():
+    # auto: single-shot up to SINGLE_SHOT_DEG (moderate fan-in keeps the
+    # bit-identical path), chunk = merge_chunk
+    assert effective_widths(2, 64, None) == (513, 64)
+    # a merge_chunk above the single-shot floor widens the auto cap
+    assert effective_widths(2, 300, None) == (601, 300)
+    # explicit cap shrinks the chunk to fit
+    assert effective_widths(2, 64, 33) == (33, 16)
+    # cap too narrow for the reduction to terminate
+    with pytest.raises(ValueError):
+        effective_widths(8, 64, 16)
+
+
+def hub_dag(n=600, hub_deg=150, seed=3):
+    """Sparse DAG plus one hub whose fan-in exceeds any small cap."""
+    return add_hub_edges(random_dag(n, 1.5, seed=seed), hub_deg,
+                         seed=seed + 1)
+
+
+# --------------------------------------------------------------- soundness
+
+
+@pytest.mark.parametrize("chunk", [2, 8])
+def test_tree_merge_labels_sound(chunk):
+    """Forcing every merge through the tree reduction must keep labels
+    sound: queries still answer exactly (covers may widen, never drop)."""
+    g = random_dag(220, 2.5, seed=11)
+    host = build_index(g, k=2, variant="L", cover_method="topgap",
+                       precondensed=True)
+    wf = build_wavefront(g, k=2, variant="L", merge_chunk=chunk,
+                         m_cap=chunk * 2 + 1)
+    assert wf.hub_nodes > 0          # the tiny chunk actually forced hubs
+    assert wf.host_fallbacks == 0
+    host.labels[: g.n] = labels_from_wavefront(wf)
+    tc = brute_force_closure(g)
+    eng = QueryEngine(host)
+    for s in range(0, g.n, 7):
+        for t in range(0, g.n, 11):
+            assert eng.reachable(s, t) == tc[s, t], (s, t)
+
+
+def test_tree_merge_exactness_sound():
+    """Exact intervals of tree-reduced labels must only claim truly
+    reachable ids (approximate may over-cover; exact must not)."""
+    g = hub_dag(n=300, hub_deg=80)
+    wf = build_wavefront(g, k=2, variant="G", merge_chunk=4,
+                         m_cap=4 * 8 + 1)
+    assert wf.hub_nodes > 0
+    tc = brute_force_closure(g)
+    pi = wf.tl.pi[: g.n]
+    # node_of_pi[p-1] = node with post-order id p
+    node_of_pi = np.empty(g.n, dtype=np.int64)
+    node_of_pi[pi - 1] = np.arange(g.n)
+    labels = labels_from_wavefront(wf)
+    for v in range(g.n):
+        b, e, x = labels[v]
+        for i in range(b.size):
+            lo, hi = int(b[i]), int(e[i])
+            covered = node_of_pi[lo - 1: hi]
+            if x[i]:
+                assert tc[v, covered].all(), (v, lo, hi)
+        # coverage: every reachable target's pi must hit some interval
+        reach_pi = pi[np.flatnonzero(tc[v])]
+        for p in reach_pi:
+            assert any(b[i] <= p <= e[i] for i in range(b.size)), (v, p)
+
+
+def test_tree_merge_bit_identical_when_fitting():
+    """Nodes whose fan-in fits the cap single-shot — bit-identical to the
+    host sweep even when other nodes of the same wave tree-reduce."""
+    g = hub_dag(n=400, hub_deg=100)
+    host = build_index(g, k=2, variant="L", cover_method="topgap",
+                       use_seeds=False, precondensed=True)
+    wf = build_wavefront(g, k=2, variant="L", merge_chunk=16,
+                         m_cap=16 * 2 + 1)
+    assert wf.hub_nodes > 0
+    wl = labels_from_wavefront(wf)
+    deg = g.degrees()
+    fit = deg * 2 + 1 <= 16 * 2 + 1
+    mismatched_fitting = [v for v in range(g.n) if fit[v]
+                          and iv.to_tuples(host.labels[v]) != iv.to_tuples(wl[v])]
+    # a fitting node may still differ if a hub is among its successors;
+    # nodes with no hub anywhere downstream must match exactly
+    hubs = set(np.flatnonzero(~fit).tolist())
+    downstream_hub = np.zeros(g.n, dtype=bool)
+    order = np.argsort(-wf.tl.tau[: g.n], kind="stable")
+    for v in order:
+        row = g.indices[g.indptr[v]: g.indptr[v + 1]]
+        downstream_hub[v] = any(int(w) in hubs or downstream_hub[int(w)]
+                                for w in row)
+    for v in mismatched_fitting:
+        assert downstream_hub[v], f"clean fitting node {v} diverged"
+
+
+# -------------------------------------------------- per-level slab sizing
+
+
+def test_per_level_slab_sizing_beats_global():
+    """A single hub must no longer inflate every wave's merge buffer: the
+    recorded peak working set stays strictly below the pre-refactor
+    global-max-degree allocation."""
+    g = hub_dag(n=2000, hub_deg=400, seed=9)
+    w_out = 2
+    wf = build_wavefront(g, k=2, variant="L")
+    assert wf.host_fallbacks == 0
+    assert wf.hub_nodes >= 1
+    assert wf.peak_slab_bytes > 0
+    # the monolithic builder's global-max-degree slab (the wave-local
+    # prior may coincide with the new peak when the hub's wave is lonely)
+    blevel = wf.tl.blevel[: g.n]
+    prior = prior_peak_slab_bytes(g.degrees(), blevel, w_out,
+                                  scope="global")
+    assert wf.peak_slab_bytes < prior
+
+
+def test_levels_without_hubs_size_locally():
+    """On a hub-free layered DAG the peak equals the replayed wave-local
+    prior (no hub to split off), below the global worst-case slab."""
+    g = layered_dag(800, 20, 3.0, seed=4)
+    wf = build_wavefront(g, k=2, variant="L")
+    assert wf.hub_nodes == 0 and wf.merge_rounds == 0
+    blevel = wf.tl.blevel[: g.n]
+    deg = g.degrees()
+    assert wf.peak_slab_bytes <= prior_peak_slab_bytes(deg, blevel, 2,
+                                                       scope="wave")
+    assert (prior_peak_slab_bytes(deg, blevel, 2, scope="wave")
+            <= prior_peak_slab_bytes(deg, blevel, 2, scope="global"))
