@@ -85,6 +85,51 @@ def graph_cache_dir() -> Path:
         os.path.join(os.path.expanduser("~"), ".cache", "repro-graphs")))
 
 
+# ------------------------------------------------- cache checksum manifest
+#
+# Every cached .npz gets a sha256 sidecar (<name>.npz.sha256) written with
+# the artifact; loads verify it so a truncated download or bit-rotted cache
+# fails loudly instead of silently feeding a corrupt graph to a benchmark.
+# Pre-manifest caches (no sidecar) are adopted trust-on-first-use.
+
+def _sha256_file(path: Path) -> str:
+    import hashlib
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def _checksum_path(cache: Path) -> Path:
+    return cache.with_name(cache.name + ".sha256")
+
+
+def write_cache_checksum(cache: Path) -> str:
+    digest = _sha256_file(cache)
+    tmp = _checksum_path(cache).with_suffix(".sha256.tmp")
+    tmp.write_text(digest + "\n")
+    os.replace(tmp, _checksum_path(cache))
+    return digest
+
+
+def verify_cache_checksum(cache: Path) -> None:
+    """Raise with a re-download hint when the cached npz does not match its
+    recorded sha256; adopt legacy caches that predate the manifest."""
+    side = _checksum_path(cache)
+    if not side.exists():
+        write_cache_checksum(cache)       # trust-on-first-use adoption
+        return
+    expected = side.read_text().strip()
+    actual = _sha256_file(cache)
+    if actual != expected:
+        raise RuntimeError(
+            f"graph cache {cache} is corrupt: sha256 {actual} != recorded "
+            f"{expected}. Delete {cache} (and {side.name}) to re-download "
+            f"from the dataset mirror, or point $REPRO_GRAPH_CACHE at a "
+            f"clean directory.")
+
+
 def parse_gra(text: str) -> CSR:
     """Parse the GRAIL ``.gra`` adjacency format.
 
@@ -139,6 +184,7 @@ def load_real_graph(name: str, verbose: bool = True) -> CSR:
     meta = REAL_GRAPHS[name]
     cache = graph_cache_dir() / f"{name}.npz"
     if cache.exists():
+        verify_cache_checksum(cache)          # loud failure on corruption
         with np.load(cache) as z:
             return CSR(n=int(z["n"]), indptr=z["indptr"],
                        indices=z["indices"])
@@ -156,6 +202,7 @@ def load_real_graph(name: str, verbose: bool = True) -> CSR:
             np.savez_compressed(f, n=g.n, indptr=g.indptr,
                                 indices=g.indices)
         os.replace(tmp, cache)
+        write_cache_checksum(cache)
         if verbose:
             print(f"# {name}: fetched n={g.n} m={g.m}, cached at {cache}",
                   flush=True)

@@ -1,0 +1,160 @@
+"""Live-graph churn benchmark (DESIGN.md §6): the cost of being dynamic.
+
+Per dataset (synthetic stand-ins + the real citeseer download, both via
+``benchmarks.common.get_graph``):
+
+  * updates/sec through ``QuerySession.apply_updates`` (overlay append +
+    can-reach-tail maintenance, no queries in the loop);
+  * ns/query at overlay fill 0% / 50% / 100% — the serving-latency price
+    of the union-graph expansion as the delta slab fills;
+  * ``compact()`` seconds (bounded incremental relabeling: affected waves
+    only) vs a full from-scratch rebuild of the union graph at the same
+    budget k, plus the affected-wave telemetry that bounds the work.
+
+    PYTHONPATH=src python -m benchmarks.dynamic_perf \
+        --json BENCH_dynamic.json --datasets go-like,citeseer
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from .common import Timer, emit, get_graph
+
+DEFAULT_DATASETS = ("go-like", "human-like", "citeseer")
+
+
+def _fresh_edges(g, count: int, seed: int, order=None):
+    """Random DAG-respecting candidate inserts (shared helper, so the
+    bench streams the same workload shape as serve's churn loop).
+    ``order`` = the index's comp map keeps inserts on the bounded-
+    compaction path even for real graphs whose node ids are not a
+    topological order."""
+    from repro.core.workload import random_edge_inserts
+    return random_edge_inserts(g.n, count, np.random.default_rng(seed),
+                               order=order)
+
+
+def run_dataset(name: str, n_queries: int, cap: int, k: int,
+                update_batch: int = 256, seed: int = 0) -> dict:
+    from repro.core.workload import random_queries
+    from repro.reach import IndexSpec, QuerySession, build
+
+    g = get_graph(name)
+    spec = IndexSpec(k=k, variant="G", phase2_mode="sparse",
+                     overlay_cap=cap, auto_compact=False)
+    with Timer() as tb:
+        ix = build(g, spec)
+    qs, qt = random_queries(g, n_queries, seed=seed + 1)
+    row = {"n": g.n, "m": g.m, "build_seconds": tb.seconds, "cap": cap}
+
+    sess = QuerySession(ix, spec)
+    sess.query(qs, qt)                      # warm phase 1 + phase 2
+
+    # ---- ns/query at overlay fill 0 / 50 / 100 % -----------------------
+    fills = {}
+    for frac, label in ((0.0, "0"), (0.5, "50"), (1.0, "100")):
+        target = int(cap * frac)
+        tries = 0
+        while sess.stats.overlay_edges < target and tries < 64:
+            tries += 1
+            s, d = _fresh_edges(g, 2 * (target - sess.stats.overlay_edges),
+                                seed + 7 * tries + sess.stats.overlay_edges,
+                                order=ix.cond.comp)
+            room = target - sess.stats.overlay_edges
+            sess.apply_updates(s[:room], d[:room])
+        sess.query(qs[:256], qt[:256])      # warm the overlay executors
+        sess.reset_stats()
+        with Timer() as t:
+            sess.query(qs, qt)
+        st = sess.stats
+        fills[label] = {
+            "overlay_edges": st.overlay_edges,
+            "ns_per_query": t.seconds / n_queries * 1e9,
+            "phase2_queries": st.phase2_queries,
+            "n_overlay_hits": st.n_overlay_hits,
+        }
+        emit(f"dynamic/{name}/query@fill{label}",
+             t.seconds / n_queries * 1e6,
+             f"overlay={st.overlay_edges};p2={st.phase2_queries}")
+    row["query_at_fill"] = fills
+
+    # ---- updates/sec (fresh session: pure apply cost) -------------------
+    sess_u = QuerySession(ix, spec)
+    s, d = _fresh_edges(g, 4 * cap, seed + 3, order=ix.cond.comp)
+    applied = 0
+    with Timer() as t:
+        lo = 0
+        while applied < cap and lo < s.size:
+            hi = min(lo + update_batch, s.size)
+            room = cap - applied
+            applied += sess_u.apply_updates(s[lo:hi][:room], d[lo:hi][:room])
+            lo = hi
+    row["updates"] = {"applied": applied,
+                      "seconds": t.seconds,
+                      "updates_per_sec": (applied / t.seconds
+                                          if t.seconds else 0.0)}
+    emit(f"dynamic/{name}/apply", t.seconds / max(applied, 1) * 1e6,
+         f"applied={applied}")
+
+    # ---- compact() vs full device rebuild -------------------------------
+    # capture the edges sess is about to fold, so both timings cover the
+    # SAME union graph
+    from repro.reach.dynamic import union_dag
+    ov = sess.engine.overlay
+    esrc, edst = (ov.edges() if ov is not None
+                  else (np.zeros(0, np.int64), np.zeros(0, np.int64)))
+    gu = union_dag(ix.cond.dag, esrc, edst)
+    with Timer() as tc:
+        cstats = sess.compact(mode="auto")
+    row["compact"] = {
+        "seconds": tc.seconds,
+        "builder": cstats.builder,
+        "affected_nodes": cstats.affected_nodes,
+        "waves_touched": cstats.waves_touched,
+        "waves_total": cstats.waves_total,
+    }
+    with Timer() as tf:
+        build(gu, IndexSpec(k=k, variant="G", builder="wavefront",
+                            cover_method="topgap"))
+    row["full_rebuild_seconds"] = tf.seconds
+    emit(f"dynamic/{name}/compact", tc.seconds * 1e6,
+         f"waves={cstats.waves_touched}/{cstats.waves_total};"
+         f"full_s={tf.seconds:.2f}")
+
+    # compacted serving is back to base speed
+    sess.query(qs[:256], qt[:256])
+    sess.reset_stats()
+    with Timer() as t:
+        sess.query(qs, qt)
+    row["ns_per_query_post_compact"] = t.seconds / n_queries * 1e9
+    return row
+
+
+def run_bench_json(json_path: str, datasets=None, n_queries: int = 20_000,
+                   cap: int = 1024, k: int = 2) -> dict:
+    out = {"datasets": {}}
+    for name in datasets or DEFAULT_DATASETS:
+        out["datasets"][name] = run_dataset(name, n_queries, cap, k)
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    print(f"# wrote {json_path}", flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_dynamic.json")
+    ap.add_argument("--datasets", default=",".join(DEFAULT_DATASETS))
+    ap.add_argument("--queries", type=int, default=20_000)
+    ap.add_argument("--cap", type=int, default=1024)
+    ap.add_argument("--k", type=int, default=2)
+    args = ap.parse_args()
+    run_bench_json(args.json, datasets=tuple(args.datasets.split(",")),
+                   n_queries=args.queries, cap=args.cap, k=args.k)
+
+
+if __name__ == "__main__":
+    main()

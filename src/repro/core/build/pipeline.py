@@ -146,31 +146,9 @@ def build_wavefront(dag: CSR, tl: Optional[TreeLabels] = None, k: int = 2,
         nodes = order[bounds[lv]: bounds[lv + 1]]
         if nodes.size == 0:
             continue
-        deg_lv = deg[nodes]
-        fits = deg_lv * w_out + 1 <= m_cap
-        small, hubs = nodes[fits], nodes[~fits]
-
-        if small.size:
-            nb, ne, nx, ncnt = _single_shot_wave(
-                begins, ends, exact, small, int(deg_lv[fits].max(initial=0)),
-                indptr, indices, tree_b_all, tree_e_all, w_out, stats)
-            sm = jnp.asarray(np.concatenate(
-                [small, np.full(nb.shape[0] - small.size, n,
-                                dtype=np.int64)]))
-            begins = begins.at[sm].set(nb)
-            ends = ends.at[sm].set(ne)
-            exact = exact.at[sm].set(nx)
-            counts[small] = np.asarray(ncnt)[: small.size]
-
-        if hubs.size:
-            hb, he, hx, hcnt = reduce_wave(
-                begins, ends, exact, hubs, indptr, indices,
-                tree_b_all[hubs], tree_e_all[hubs], w_out, chunk, stats)
-            hj = jnp.asarray(hubs)
-            begins = begins.at[hj].set(hb)
-            ends = ends.at[hj].set(he)
-            exact = exact.at[hj].set(hx)
-            counts[hubs] = np.asarray(hcnt)
+        begins, ends, exact = _merge_wave(
+            begins, ends, exact, counts, nodes, deg[nodes], m_cap, chunk,
+            indptr, indices, tree_b_all, tree_e_all, w_out, stats)
 
     ix = WavefrontIndex(begins=np.array(begins), ends=np.array(ends),
                         exact=np.array(exact), counts=counts, tl=tl, k=k,
@@ -184,6 +162,43 @@ def build_wavefront(dag: CSR, tl: Optional[TreeLabels] = None, k: int = 2,
         ix.drain_order = _drain_to_budget(ix, dag, k, budget or k * n)
     ix.seconds = time.perf_counter() - t0
     return ix
+
+
+def _merge_wave(begins, ends, exact, counts, nodes, deg_lv, m_cap: int,
+                chunk: int, indptr, indices, tree_b_all, tree_e_all,
+                w_out: int, stats: MergeStats):
+    """One wave's merges: the fit/hub split, the single-shot call for
+    fitting nodes, the tree reduction for hubs, and the slab/count
+    writeback. Shared verbatim by ``build_wavefront`` (every node) and
+    ``rebuild_affected`` (affected nodes only) so the compact path can
+    never drift from the from-scratch semantics. Returns the updated
+    (begins, ends, exact) slabs; ``counts`` is written in place."""
+    n_dummy = begins.shape[0] - 1
+    fits = deg_lv * w_out + 1 <= m_cap
+    small, hubs = nodes[fits], nodes[~fits]
+
+    if small.size:
+        nb, ne, nx, ncnt = _single_shot_wave(
+            begins, ends, exact, small, int(deg_lv[fits].max(initial=0)),
+            indptr, indices, tree_b_all, tree_e_all, w_out, stats)
+        sm = jnp.asarray(np.concatenate(
+            [small, np.full(nb.shape[0] - small.size, n_dummy,
+                            dtype=np.int64)]))
+        begins = begins.at[sm].set(nb)
+        ends = ends.at[sm].set(ne)
+        exact = exact.at[sm].set(nx)
+        counts[small] = np.asarray(ncnt)[: small.size]
+
+    if hubs.size:
+        hb, he, hx, hcnt = reduce_wave(
+            begins, ends, exact, hubs, indptr, indices,
+            tree_b_all[hubs], tree_e_all[hubs], w_out, chunk, stats)
+        hj = jnp.asarray(hubs)
+        begins = begins.at[hj].set(hb)
+        ends = ends.at[hj].set(he)
+        exact = exact.at[hj].set(hx)
+        counts[hubs] = np.asarray(hcnt)
+    return begins, ends, exact
 
 
 def _single_shot_wave(begins, ends, exact, nodes, d_max, indptr, indices,
@@ -244,6 +259,108 @@ def _drain_to_budget(ix: WavefrontIndex, dag: CSR, k: int,
         if total <= budget:
             break
     return drained
+
+
+def rebuild_affected(dag: CSR, tl: TreeLabels, affected: np.ndarray,
+                     labels_old, k: int, variant: str = "L", c: int = 4,
+                     merge_chunk: int = DEFAULT_MERGE_CHUNK,
+                     m_cap: Optional[int] = None,
+                     budget: Optional[int] = None):
+    """Affected-subgraph entry point of the staged pipeline (DESIGN.md §6).
+
+    Re-runs PLAN → WAVES → DRAIN over only the nodes whose reachable set
+    changed (``affected`` [n] bool — under insert-only updates, the union-
+    graph ancestors of the inserted edges' tails, which is closed under
+    predecessors, so every label whose merge inputs changed is itself
+    recomputed). ``dag`` is the UNION condensed DAG; ``tl`` carries the
+    union graph's recomputed tau/blevel beside the base build's frozen
+    pi/tbegin/tree (the tree cover stays a subgraph of the union, so its
+    post-order intervals remain exact). Unaffected labels are scattered
+    into the slabs once — wave merges of affected nodes read them in place
+    — and returned by reference.
+
+    Returns ``(labels, info)``: the per-node IntervalSets (+ virtual root)
+    and a dict with the wave telemetry the acceptance tests assert on
+    (``waves_total``/``waves_touched``/``affected_nodes``), the MergeStats
+    counters, the drain order, and ``total_intervals``.
+    """
+    n = dag.n
+    w_out = k if variant == "L" else c * k
+    m_cap, chunk = effective_widths(w_out, merge_chunk, m_cap)
+    widths = np.fromiter((labels_old[v][0].size for v in range(n)),
+                         dtype=np.int64, count=n)
+    if int(widths.max(initial=0)) > w_out:
+        raise ValueError(
+            f"existing labels up to {int(widths.max())} intervals exceed "
+            f"the slab width {w_out} for variant={variant!r}, k={k} — "
+            "compact must fall back to a full rebuild")
+
+    begins_np = np.full((n + 1, w_out), np.int32(INVALID), dtype=np.int32)
+    ends_np = np.full((n + 1, w_out), -1, dtype=np.int32)
+    exact_np = np.zeros((n + 1, w_out), dtype=bool)
+    counts = np.zeros(n + 1, dtype=np.int32)
+    for v in range(n):
+        if affected[v]:
+            continue                      # recomputed below, in wave order
+        b, e, x = labels_old[v]
+        cnt = b.size
+        begins_np[v, :cnt] = b
+        ends_np[v, :cnt] = e
+        exact_np[v, :cnt] = x
+        counts[v] = cnt
+
+    begins = jnp.asarray(begins_np)
+    ends = jnp.asarray(ends_np)
+    exact = jnp.asarray(exact_np)
+    tree_b_all = tl.tbegin[:n].astype(np.int32)
+    tree_e_all = tl.pi[:n].astype(np.int32)
+    indptr, indices = dag.indptr, dag.indices
+    deg = dag.degrees()
+    stats = MergeStats()
+
+    order, bounds = wavefront_schedule(tl.blevel[:n])
+    n_levels = len(bounds) - 1
+    waves_touched = 0
+    for lv in range(n_levels):
+        nodes = order[bounds[lv]: bounds[lv + 1]]
+        nodes = nodes[affected[nodes]]
+        if nodes.size == 0:
+            continue
+        waves_touched += 1
+        begins, ends, exact = _merge_wave(
+            begins, ends, exact, counts, nodes, deg[nodes], m_cap, chunk,
+            indptr, indices, tree_b_all, tree_e_all, w_out, stats)
+
+    wf = WavefrontIndex(begins=np.array(begins), ends=np.array(ends),
+                        exact=np.array(exact), counts=counts, tl=tl, k=k,
+                        levels=n_levels,
+                        hub_nodes=stats.hub_nodes,
+                        merge_rounds=stats.merge_rounds,
+                        host_fallbacks=stats.host_fallbacks,
+                        peak_slab_bytes=stats.peak_slab_bytes)
+    if variant == "G":
+        wf.drain_order = _drain_to_budget(wf, dag, k, budget or k * n)
+
+    from .. import intervals as iv
+    touched = affected.copy()
+    touched[wf.drain_order] = True        # drained rows changed in the slab
+    labels = [iv.make_set(wf.begins[v, : wf.counts[v]],
+                          wf.ends[v, : wf.counts[v]],
+                          wf.exact[v, : wf.counts[v]])
+              if touched[v] else labels_old[v] for v in range(n)]
+    labels.append(iv.single(1, n + 1, True))          # virtual root
+    info = {
+        "waves_total": n_levels,
+        "waves_touched": waves_touched,
+        "affected_nodes": int(affected.sum()),
+        "hub_nodes": stats.hub_nodes,
+        "merge_rounds": stats.merge_rounds,
+        "host_fallbacks": stats.host_fallbacks,
+        "peak_slab_bytes": stats.peak_slab_bytes,
+        "drain_order": wf.drain_order,
+        "total_intervals": int(wf.counts[:-1].sum()) + 1,
+    }
+    return labels, info
 
 
 def labels_from_wavefront(ix: WavefrontIndex):

@@ -147,7 +147,8 @@ def classify_sharded(mesh, state, cs, ct, *, use_pallas: bool = False,
 def expand_frontier_sharded(mesh, slab, meta, ell, tail_src, tail_dst,
                             is_hub, cs, ct, pad, *, n_nodes: int,
                             max_steps: int, cap: int,
-                            dp_axes=("pod", "data")):
+                            dp_axes=("pod", "data"),
+                            can_reach_tail=None):
     """Sparse phase-2 frontier expansion under both placements.
 
     The UNKNOWN residue (cs, ct, pad — [Q] with Q divisible by the data
@@ -163,10 +164,19 @@ def expand_frontier_sharded(mesh, slab, meta, ell, tail_src, tail_dst,
     Returns (pos [Q] bool, overflow [Q] bool) sharded like the queries;
     overflow is the per-data-shard flag broadcast over its block (a scalar
     out_spec would assert cross-shard equality that does not hold).
+
+    ``can_reach_tail`` ([n_nodes] bool, replicated) switches the loop into
+    overlay mode for live-update serving (reach.dynamic, DESIGN.md §6):
+    callers pass the base COO tail with the delta slab appended plus the
+    tail-extended hub mask, and base-NEG candidates that can still reach a
+    delta tail stay expandable — same union-graph semantics as the
+    single-device ``kernels.frontier.expand_frontier_overlay``.
     """
     qspec = _qspec(mesh, dp_axes)
+    overlay = can_reach_tail is not None
 
-    def kern(slab_l, meta_l, ell_l, tsrc, tdst, hub, cs_l, ct_l, pad_l):
+    def kern(slab_l, meta_l, ell_l, tsrc, tdst, hub, cs_l, ct_l, pad_l,
+             *crt_arg):
         def gather(table, ids):
             return jax.lax.psum(_own_rows(table, ids), "model")
 
@@ -174,7 +184,11 @@ def expand_frontier_sharded(mesh, slab, meta, ell, tail_src, tail_dst,
             v = kref.interval_stab_classify_packed_ref(
                 gather(meta_l, cands), gather(meta_l, tgts),
                 gather(slab_l, cands))
-            return jnp.where(cands == tgts, kref.POS, v)
+            v = jnp.where(cands == tgts, kref.POS, v)
+            if overlay:
+                v = jnp.where((v == kref.NEG) & crt_arg[0][cands],
+                              jnp.int32(kref.UNKNOWN), v)
+            return v
 
         pos, ovf = kfrontier.expand_frontier_loop(
             ell_l, tsrc, tdst, hub, cs_l, ct_l, pad_l,
@@ -182,12 +196,15 @@ def expand_frontier_sharded(mesh, slab, meta, ell, tail_src, tail_dst,
             gather_rows=gather, classify=classify)
         return pos, jnp.full_like(pos, ovf)
 
-    fn = shard_map_compat(
-        kern, mesh=mesh,
-        in_specs=(P("model", None), P("model", None), P("model", None),
-                  P(None), P(None), P(None), qspec, qspec, qspec),
-        out_specs=(qspec, qspec))
-    return fn(slab, meta, ell, tail_src, tail_dst, is_hub, cs, ct, pad)
+    in_specs = (P("model", None), P("model", None), P("model", None),
+                P(None), P(None), P(None), qspec, qspec, qspec)
+    args = (slab, meta, ell, tail_src, tail_dst, is_hub, cs, ct, pad)
+    if overlay:
+        in_specs += (P(None),)
+        args += (can_reach_tail,)
+    fn = shard_map_compat(kern, mesh=mesh, in_specs=in_specs,
+                          out_specs=(qspec, qspec))
+    return fn(*args)
 
 
 def _pad_rows(a: np.ndarray, n_pad: int, fill=0) -> np.ndarray:
@@ -227,7 +244,7 @@ class DistributedQueryEngine(DeviceQueryEngine):
                  use_pallas: bool = True, phase2_mode: str = "auto",
                  ell_width: Optional[int] = None, frontier_cap: int = 4096,
                  frontier_cap_max: int = 1 << 18, packed=None, ell=None,
-                 dp_axes=("pod", "data")):
+                 overlay_cap: int = 4096, dp_axes=("pod", "data")):
         if placement not in PLACEMENTS:
             raise ValueError(f"placement must be one of {PLACEMENTS}, "
                              f"got {placement!r}")
@@ -242,7 +259,7 @@ class DistributedQueryEngine(DeviceQueryEngine):
                          phase2_mode=phase2_mode, ell_width=ell_width,
                          frontier_cap=frontier_cap,
                          frontier_cap_max=frontier_cap_max,
-                         packed=packed, ell=ell)
+                         packed=packed, ell=ell, overlay_cap=overlay_cap)
         self.placement = placement
         self.mesh = make_serving_mesh(placement, mesh_shape)
         self.dp_axes = dp_axes
@@ -265,6 +282,8 @@ class DistributedQueryEngine(DeviceQueryEngine):
         self._ell_dist = None
         self._classify_exec = jax.jit(self._classify_fn)
         self._expand_exec = jax.jit(self._expand_fn, static_argnames="cap")
+        self._expand_overlay_exec = jax.jit(self._expand_overlay_fn,
+                                            static_argnames="cap")
 
     # ------------------------------------------------------------- executors
     def _classify_fn(self, slab, meta, cs, ct):
@@ -278,6 +297,15 @@ class DistributedQueryEngine(DeviceQueryEngine):
             self.mesh, slab, meta, ell, tsrc, tdst, hub, cs, ct, pad,
             n_nodes=self.n_pad, max_steps=self.max_steps, cap=cap,
             dp_axes=self.dp_axes)
+
+    def _expand_overlay_fn(self, slab, meta, ell, tsrc, tdst, hub, crt,
+                           cs, ct, pad, *, cap: int):
+        # union-graph BFS depth is bounded by the real node count, not the
+        # base blevel (delta edges may cycle across the DAG)
+        return expand_frontier_sharded(
+            self.mesh, slab, meta, ell, tsrc, tdst, hub, cs, ct, pad,
+            n_nodes=self.n_pad, max_steps=self.packed.n, cap=cap,
+            dp_axes=self.dp_axes, can_reach_tail=crt)
 
     # --------------------------------------------------------------- phase 1
     def classify(self, srcs, dsts):
@@ -326,4 +354,38 @@ class DistributedQueryEngine(DeviceQueryEngine):
         pos, ovf = self._expand_exec(
             self._state["slab"], self._state["meta"], ell, tsrc, tdst,
             is_hub, cs_j, ct_j, jnp.asarray(pad), cap=cap)
+        return np.asarray(pos), bool(np.asarray(ovf).any())
+
+    # ------------------------------------------------------- live updates
+    def _overlay_dev(self):
+        """Replicated overlay state beside the sharded base tables: the
+        union COO tail (base + fixed-capacity delta slab), the
+        tail-extended hub mask, and the can-reach-tail gate padded to the
+        model-sharded row count. Rebuilt once per add batch — constant
+        shapes, so the shard_map'd expansion never retraces."""
+        ov = self.overlay
+        if self._overlay_cache is None or self._overlay_cache[0] != ov.version:
+            ell, tsrc, tdst, is_hub = self._ell_sharded()
+            # the overlay-vs-tail semantics live in ONE place
+            # (DeltaOverlay.union_tail_state, shared with the single-device
+            # engine); this method only pads the gate to the model-sharded
+            # row count and places everything replicated
+            tsrc_u, tdst_u, hub_u, crt_n = ov.union_tail_state(
+                tsrc, tdst, is_hub)
+            rep = NamedSharding(self.mesh, P(None))
+            crt = np.zeros(self.n_pad, dtype=bool)
+            crt[: ov.n] = np.asarray(crt_n)
+            state = (ell,
+                     jax.device_put(tsrc_u, rep),
+                     jax.device_put(tdst_u, rep),
+                     jax.device_put(hub_u, rep),
+                     jax.device_put(crt, rep))
+            self._overlay_cache = (ov.version, state)
+        return self._overlay_cache[1]
+
+    def _expand_chunk_overlay(self, cs_j, ct_j, pad: np.ndarray, cap: int):
+        ell, tsrc_u, tdst_u, hub_u, crt = self._overlay_dev()
+        pos, ovf = self._expand_overlay_exec(
+            self._state["slab"], self._state["meta"], ell, tsrc_u, tdst_u,
+            hub_u, crt, cs_j, ct_j, jnp.asarray(pad), cap=cap)
         return np.asarray(pos), bool(np.asarray(ovf).any())

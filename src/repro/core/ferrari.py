@@ -50,6 +50,11 @@ class BuildStats:
     merge_rounds: int = 0                # total merge kernel rounds
     host_fallbacks: int = 0              # fan-ins sent back to the host
     peak_slab_bytes: int = 0             # largest merge working set
+    # bounded incremental relabeling (reach.dynamic compact, DESIGN.md §6)
+    # — zeros for from-scratch builds
+    affected_nodes: int = 0              # labels recomputed by compact()
+    waves_touched: int = 0               # waves the compact pipeline re-ran
+    waves_total: int = 0                 # waves in the full schedule
 
     @property
     def seconds_total(self) -> float:

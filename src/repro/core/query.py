@@ -35,6 +35,12 @@ class QueryStats(ResettableStats):
     answered_stab: int = 0       # exact hit or total miss at the source
     answered_expand: int = 0     # required guided DFS
     nodes_expanded: int = 0
+    # live-update path (reach.dynamic) — mirrored on ServeStats/SessionStats
+    # so per-workload phase mixes stay attributable under churn; reset()
+    # covers them via the ResettableStats field sweep
+    n_updates: int = 0
+    n_overlay_hits: int = 0
+    n_compactions: int = 0
 
 
 class QueryEngine:

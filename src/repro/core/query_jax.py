@@ -67,6 +67,10 @@ class ServeStats(ResettableStats):
     phase2_sparse: int = 0
     phase2_host: int = 0
     sparse_retries: int = 0
+    # live-update path (reach.dynamic, DESIGN.md §6)
+    n_updates: int = 0           # delta edges accepted into the overlay
+    n_overlay_hits: int = 0      # base-NEG queries flipped POS by the overlay
+    n_compactions: int = 0       # overlay folds into the index
 
 
 @partial(jax.jit, static_argnames=("max_steps",))
@@ -113,7 +117,8 @@ class DeviceQueryEngine:
                  phase2_chunk: int = 256, use_pallas: bool = True,
                  phase2_mode: str = "auto", ell_width: Optional[int] = None,
                  frontier_cap: int = 4096, frontier_cap_max: int = 1 << 18,
-                 packed: Optional[PackedIndex] = None, ell=None):
+                 packed: Optional[PackedIndex] = None, ell=None,
+                 overlay_cap: int = 4096):
         if phase2_mode not in ("auto", "dense", "sparse", "host"):
             raise ValueError(f"unknown phase2_mode {phase2_mode!r}")
         self.index = index
@@ -140,6 +145,11 @@ class DeviceQueryEngine:
         self._ell_host = ell          # optional injected (ell, tsrc, tdst)
         self._ell_dev = None          # built lazily on first sparse use
         self._host_engine = None      # built lazily on first host use
+        # live-update overlay (reach.dynamic): created on first insert
+        self.overlay_cap = overlay_cap
+        self.overlay = None
+        self._overlay_cache = None    # (version, device state) per add batch
+        self._union_adj_cache = None  # (version, adj, crt) — dense mode
         # One jitted phase-1 executor per engine: its compile cache is keyed
         # by batch shape, so _cache_size() counts traces — the serving
         # session asserts this stays at one per padding bucket.
@@ -187,29 +197,77 @@ class DeviceQueryEngine:
         verdict = self._classify_exec(self.dev, cs, ct)
         return verdict, cs, ct
 
+    # ------------------------------------------------------- live updates
+    def apply_updates(self, csrc, cdst) -> int:
+        """Append condensed-id edges to the delta overlay (creating it on
+        first use). Returns how many edges were actually new; subsequent
+        ``answer()`` calls are sound and complete over the union graph.
+        Raises ``reach.dynamic.OverlayFull`` when the batch does not fit —
+        callers compact (``QuerySession`` automates this) and retry."""
+        if self.overlay is None:
+            from ..reach.dynamic.overlay import DeltaOverlay
+            self.overlay = DeltaOverlay(self.index.cond.dag, self.overlay_cap)
+        applied = self.overlay.add(csrc, cdst)
+        self.stats.n_updates += applied
+        return applied
+
+    def _overlay_dev(self):
+        """Device state of the overlay union adjacency, rebuilt once per
+        add batch: the base COO tail with the delta slab appended (fixed
+        [m_t + cap] shapes — no retrace across updates), the hub mask
+        extended to delta tails, and the can-reach-tail pruning gate."""
+        ov = self.overlay
+        if self._overlay_cache is None or self._overlay_cache[0] != ov.version:
+            ell, tsrc, tdst, is_hub = self._ell()
+            self._overlay_cache = (
+                ov.version, (ell,) + ov.union_tail_state(tsrc, tdst, is_hub))
+        return self._overlay_cache[1]
+
+    @property
+    def _overlay_live(self) -> bool:
+        return self.overlay is not None and self.overlay.n_edges > 0
+
     # ------------------------------------------------------------------ API
     def answer(self, srcs, dsts) -> np.ndarray:
         verdict, cs, ct = self.classify(srcs, dsts)
         verdict = np.asarray(verdict)
         out = verdict == ops.POS
+        neg_mask = verdict == ops.NEG
         unknown = np.flatnonzero(verdict == ops.UNKNOWN)
         self.stats.n_queries += len(verdict)
         self.stats.phase1_pos += int(out.sum())
-        self.stats.phase1_neg += int((verdict == ops.NEG).sum())
-        self.stats.phase2_queries += unknown.size
-        if unknown.size == 0:
-            return out
-        cs_u = np.asarray(cs)[unknown]
-        ct_u = np.asarray(ct)[unknown]
-        if self.phase2_mode == "dense":
-            self.stats.phase2_dense += unknown.size
-            res = self._phase2_dense(cs_u, ct_u)
-        elif self.phase2_mode == "sparse":
-            res = self._phase2_sparse(cs_u, ct_u)
+        overlay = self._overlay_live
+        if overlay:
+            # base-NEG is no longer final when the source can reach a
+            # delta tail: those queries join the union-graph expansion
+            # (and leave the phase-1 mix — phase1_pos/neg/phase2_queries
+            # stay a partition of n_queries under churn)
+            reopened = np.flatnonzero(
+                neg_mask & self.overlay.can_reach_tail[np.asarray(cs)])
+            residue = np.union1d(unknown, reopened)
+            self.stats.phase1_neg += int(neg_mask.sum()) - reopened.size
         else:
-            self.stats.phase2_host += unknown.size
-            res = self._phase2_host(cs_u, ct_u)
-        out[unknown] = res
+            residue = unknown
+            self.stats.phase1_neg += int(neg_mask.sum())
+        self.stats.phase2_queries += residue.size
+        if residue.size == 0:
+            return out
+        cs_u = np.asarray(cs)[residue]
+        ct_u = np.asarray(ct)[residue]
+        if self.phase2_mode == "dense":
+            self.stats.phase2_dense += residue.size
+            res = (self._phase2_dense_overlay(cs_u, ct_u) if overlay
+                   else self._phase2_dense(cs_u, ct_u))
+        elif self.phase2_mode == "sparse":
+            res = (self._phase2_sparse_overlay(cs_u, ct_u) if overlay
+                   else self._phase2_sparse(cs_u, ct_u))
+        else:
+            self.stats.phase2_host += residue.size
+            res = (self._phase2_host_overlay(cs_u, ct_u) if overlay
+                   else self._phase2_host(cs_u, ct_u))
+        out[residue] = res
+        if overlay:
+            self.stats.n_overlay_hits += int((res & neg_mask[residue]).sum())
         return out
 
     # --------------------------------------------------------------- phase 2
@@ -218,7 +276,17 @@ class DeviceQueryEngine:
             (self._host._reachable_condensed(int(a), int(b))
              for a, b in zip(cs_u, ct_u)), dtype=bool, count=cs_u.size)
 
-    def _phase2_dense(self, cs_u: np.ndarray, ct_u: np.ndarray) -> np.ndarray:
+    def _phase2_host_overlay(self, cs_u: np.ndarray,
+                             ct_u: np.ndarray) -> np.ndarray:
+        """Union-graph host BFS (terminal fallback under an active overlay:
+        the base guided DFS cannot traverse delta edges)."""
+        ov = self.overlay
+        return np.fromiter(
+            (ov.host_reachable(int(a), int(b))
+             for a, b in zip(cs_u, ct_u)), dtype=bool, count=cs_u.size)
+
+    def _dense_driver(self, cs_u: np.ndarray, ct_u: np.ndarray, adj,
+                      max_steps: int, can_reach_tail=None) -> np.ndarray:
         n = self.packed.n
         chunk = self.phase2_chunk
         res = np.zeros(cs_u.size, dtype=bool)
@@ -234,12 +302,33 @@ class DeviceQueryEngine:
             cs = jnp.asarray(cs_h)
             ct = jnp.asarray(ct_h)
             expandable, definite_pos = ops.classify_all_nodes_vs_target(
-                self.dev, ct)
+                self.dev, ct, can_reach_tail=can_reach_tail)
             front0 = jax.nn.one_hot(cs, n, dtype=jnp.bool_)
             pos = _dense_bfs(front0, expandable, definite_pos,
-                             self.adj_dense, self.max_steps)
+                             adj, max_steps)
             res[lo:hi] = np.asarray(pos)[:q]
         return res
+
+    def _phase2_dense(self, cs_u: np.ndarray, ct_u: np.ndarray) -> np.ndarray:
+        return self._dense_driver(cs_u, ct_u, self.adj_dense, self.max_steps)
+
+    def _phase2_dense_overlay(self, cs_u: np.ndarray,
+                              ct_u: np.ndarray) -> np.ndarray:
+        """Dense BFS over the union adjacency: the delta slab is scattered
+        into the base n×n matrix (padding writes a harmless (0, 0)
+        self-loop — node 0 is visited before it could re-front), base-NEG
+        nodes stay expandable while they can reach a delta tail, and the
+        step bound grows to n (delta edges may cycle across the DAG)."""
+        ov = self.overlay
+        if self._union_adj_cache is None \
+                or self._union_adj_cache[0] != ov.version:
+            adj = self.adj_dense.at[jnp.asarray(ov.src),
+                                    jnp.asarray(ov.dst)].set(1.0)
+            self._union_adj_cache = (ov.version, adj,
+                                     jnp.asarray(ov.can_reach_tail))
+        _, adj, crt = self._union_adj_cache
+        return self._dense_driver(cs_u, ct_u, adj, self.packed.n,
+                                  can_reach_tail=crt)
 
     def _phase2_chunk_size(self) -> int:
         """Queries per sparse expansion call (key packing bounds it)."""
@@ -254,7 +343,13 @@ class DeviceQueryEngine:
             jnp.asarray(pad), max_steps=self.max_steps, cap=cap)
         return np.asarray(p), bool(ovf)
 
-    def _phase2_sparse(self, cs_u: np.ndarray, ct_u: np.ndarray) -> np.ndarray:
+    def _sparse_driver(self, cs_u: np.ndarray, ct_u: np.ndarray,
+                       expand_fn, host_fn) -> np.ndarray:
+        """Chunked expansion with the overflow-retry / terminal-host-
+        fallback policy. ``expand_fn(cs_j, ct_j, pad, cap)`` runs one
+        frontier expansion; ``host_fn(cs, ct)`` resolves queries past
+        ``frontier_cap_max`` (the base guided DFS, or the union-graph BFS
+        when an overlay is live)."""
         chunk = self._phase2_chunk_size()
         res = np.zeros(cs_u.size, dtype=bool)
         self.stats.phase2_sparse += cs_u.size
@@ -271,7 +366,7 @@ class DeviceQueryEngine:
             cap = max(self.frontier_cap, chunk)
             pos = np.zeros(chunk, bool)
             while True:
-                p, ovf = self._expand_chunk(cs_j, ct_j, pad, cap)
+                p, ovf = expand_fn(cs_j, ct_j, pad, cap)
                 pos |= p
                 if not ovf:
                     break
@@ -283,11 +378,28 @@ class DeviceQueryEngine:
                     unresolved = np.flatnonzero(~pos & ~pad)
                     self.stats.phase2_host += unresolved.size
                     self.stats.phase2_sparse -= unresolved.size
-                    pos[unresolved] = self._phase2_host(cs[unresolved],
-                                                       ct[unresolved])
+                    pos[unresolved] = host_fn(cs[unresolved], ct[unresolved])
                     break
                 pad = pad | pos
                 if pad.all():
                     break       # every live query already proved positive
             res[lo:hi] = pos[:q]
         return res
+
+    def _phase2_sparse(self, cs_u: np.ndarray, ct_u: np.ndarray) -> np.ndarray:
+        return self._sparse_driver(cs_u, ct_u, self._expand_chunk,
+                                   self._phase2_host)
+
+    def _phase2_sparse_overlay(self, cs_u: np.ndarray,
+                               ct_u: np.ndarray) -> np.ndarray:
+        return self._sparse_driver(cs_u, ct_u, self._expand_chunk_overlay,
+                                   self._phase2_host_overlay)
+
+    def _expand_chunk_overlay(self, cs_j, ct_j, pad: np.ndarray, cap: int):
+        """One union-graph frontier expansion (kernels.frontier overlay
+        variant). DistributedQueryEngine swaps in the shard_map'd one."""
+        ell, tsrc_u, tdst_u, hub_u, crt = self._overlay_dev()
+        p, ovf = ops.expand_frontier_overlay(
+            self.dev, ell, tsrc_u, tdst_u, hub_u, crt, cs_j, ct_j,
+            jnp.asarray(pad), max_steps=self.packed.n, cap=cap)
+        return np.asarray(p), bool(ovf)

@@ -164,6 +164,41 @@ def expand_frontier_loop(ell, tail_src, tail_dst, is_hub, cs, ct, pad, *,
 
 
 @partial(jax.jit, static_argnames=("max_steps", "cap"))
+def expand_frontier_overlay(packed_dev: dict, ell, tail_src, tail_dst,
+                            is_hub, can_reach_tail, cs, ct, pad, *,
+                            max_steps: int, cap: int):
+    """Union-graph BFS for live-update serving (reach.dynamic, DESIGN.md §6).
+
+    Same loop as :func:`expand_frontier` with two overlay deltas:
+
+      * ``tail_src``/``tail_dst`` carry the base COO heavy tail PLUS the
+        fixed-capacity delta slab ((0, 0) padding — visited-masked no-ops),
+        and ``is_hub`` additionally marks delta-edge tails, so the
+        edge-parallel tail sweep traverses appended edges the moment a
+        tail enters a frontier.
+      * classification wraps the base rules: POS stays sound under inserts,
+        but a base-NEG candidate that can still reach a delta tail
+        (``can_reach_tail`` [n] bool, maintained by ``DeltaOverlay``) is
+        downgraded to UNKNOWN and keeps expanding — the only sound pruning
+        rule once edges can bypass the indexed adjacency.
+
+    ``max_steps`` must bound the union-graph BFS depth (delta edges may
+    create cycles across the base DAG, so callers pass n rather than the
+    base blevel bound — the while_loop still exits on frontier exhaustion).
+    """
+    def classify(cands, tgts):
+        v = ref.classify_packed_dev_ref(packed_dev, cands, tgts)
+        return jnp.where((v == ref.NEG) & can_reach_tail[cands],
+                         jnp.int32(ref.UNKNOWN), v)
+
+    return expand_frontier_loop(
+        ell, tail_src, tail_dst, is_hub, cs, ct, pad,
+        n_nodes=ell.shape[0], max_steps=max_steps, cap=cap,
+        gather_rows=lambda table, ids: table[ids],
+        classify=classify)
+
+
+@partial(jax.jit, static_argnames=("max_steps", "cap"))
 def expand_frontier(packed_dev: dict, ell, tail_src, tail_dst, is_hub,
                     cs, ct, pad, *, max_steps: int, cap: int):
     """Batched guided BFS for one chunk of UNKNOWN queries (single device).

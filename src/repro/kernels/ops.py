@@ -15,6 +15,7 @@ import numpy as np
 from . import ref
 from .batched_mp import batched_mp as _batched_mp
 from .frontier import expand_frontier as _expand_frontier
+from .frontier import expand_frontier_overlay as _expand_frontier_overlay
 from .frontier import max_batch as frontier_max_batch  # noqa: F401 (re-export)
 from .flash_attention import flash_attention as _flash
 from .interval_stab import interval_stab_classify as _stab
@@ -95,13 +96,17 @@ def classify_queries(packed_dev: dict, cs, ct, *, use_pallas: bool = True,
     return jnp.where(cs == ct, POS, verdict)
 
 
-def classify_all_nodes_vs_target(packed_dev: dict, ct, *, node_chunk=None):
+def classify_all_nodes_vs_target(packed_dev: dict, ct, *, node_chunk=None,
+                                 can_reach_tail=None):
     """Vectorized phase-2 helper: classify EVERY node u against target ct:
     returns (expandable [Q, n] bool, definite_pos [Q, n] bool).
 
     expandable(u) = u has an approximate hit and passes all negative filters
     (worth traversing); definite_pos(u) = reaching u proves the query
-    (exact hit, seed-positive, or u == ct).
+    (exact hit, seed-positive, or u == ct). ``can_reach_tail`` ([n] bool,
+    reach.dynamic overlay serving) keeps base-NEG nodes expandable while
+    they can still reach a delta-edge tail — the dense-mode analogue of the
+    sparse engine's overlay classify.
     """
     pi = packed_dev["pi"]
     n = pi.shape[0]
@@ -112,7 +117,10 @@ def classify_all_nodes_vs_target(packed_dev: dict, ct, *, node_chunk=None):
                              use_pallas=False)
         return v
     v = jax.vmap(one)(ct)                     # [Q, n]
-    return v == UNKNOWN, v == POS
+    expandable = v == UNKNOWN
+    if can_reach_tail is not None:
+        expandable |= (v == NEG) & can_reach_tail[None, :]
+    return expandable, v == POS
 
 
 def expand_frontier(packed_dev: dict, ell, tail_src, tail_dst, is_hub,
@@ -126,6 +134,19 @@ def expand_frontier(packed_dev: dict, ell, tail_src, tail_dst, is_hub,
     """
     return _expand_frontier(packed_dev, ell, tail_src, tail_dst, is_hub,
                             cs, ct, pad, max_steps=max_steps, cap=cap)
+
+
+def expand_frontier_overlay(packed_dev: dict, ell, tail_src, tail_dst,
+                            is_hub, can_reach_tail, cs, ct, pad, *,
+                            max_steps: int, cap: int):
+    """Union-graph (base + delta slab) frontier expansion for live-update
+    serving (kernels.frontier / reach.dynamic, DESIGN.md §6). Interface as
+    ``expand_frontier`` plus ``can_reach_tail`` [n] bool; ``max_steps``
+    must bound the union BFS depth (callers pass n — delta edges can form
+    cycles over the base DAG)."""
+    return _expand_frontier_overlay(
+        packed_dev, ell, tail_src, tail_dst, is_hub, can_reach_tail,
+        cs, ct, pad, max_steps=max_steps, cap=cap)
 
 
 def batched_mp(adj, x, w, *, use_pallas: bool = True):

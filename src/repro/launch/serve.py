@@ -31,7 +31,8 @@ from pathlib import Path
 
 import numpy as np
 
-from ..core.workload import positive_queries, random_queries
+from ..core.workload import (positive_queries, random_edge_inserts,
+                             random_queries)
 from ..graphs.generators import scale_free_digraph
 from ..reach import IndexSpec, QuerySession, build, save_index
 from ..reach.persist import load_manifest
@@ -45,7 +46,8 @@ def serve_reachability(n_nodes: int, avg_deg: float, n_queries: int,
                        ell_width: int | None = None, n_seeds: int = 32,
                        use_seeds: bool = True,
                        spec: IndexSpec | None = None,
-                       index_dir: str | None = None):
+                       index_dir: str | None = None,
+                       n_updates: int = 0, update_batch: int = 256):
     """Serve a synthetic reachability workload through the facade.
 
     ``spec`` is the one source of truth; the individual knob kwargs
@@ -53,6 +55,13 @@ def serve_reachability(n_nodes: int, avg_deg: float, n_queries: int,
     deprecation shim and folded into an IndexSpec when ``spec`` is None.
     ``index_dir``: load the index artifact from there if one is committed,
     else build and save there (first run builds, reruns load).
+
+    ``n_updates`` streams that many random edge inserts through
+    ``session.apply_updates`` in batches of ``update_batch``, interleaved
+    with query batches — the live-graph serving loop of DESIGN.md §6.
+    Bound sessions (--index-dir) log every batch to the artifact's delta
+    log; a rerun replays them on load, so the served graph keeps growing
+    across restarts.
     """
     if spec is None:
         spec = IndexSpec(k=(None if variant == "full" else k),
@@ -131,11 +140,12 @@ def serve_reachability(n_nodes: int, avg_deg: float, n_queries: int,
                   else ("dense" if pk.n <= spec.n_dense_max else "sparse"))
         ell = (pk.ell_layout(width=spec.ell_width)
                if index_dir is not None or p2 == "sparse" else None)
+        sess = QuerySession(ix, spec, packed=pk, ell=ell)
         if index_dir is not None:
             save_index(index_dir, ix, spec, meta={"graph": graph_meta},
                        packed=pk, ell=ell)
+            sess.bind_artifact(index_dir)     # updates log + replay on rerun
             print(f"index saved to {index_dir}", flush=True)
-        sess = QuerySession(ix, spec, packed=pk, ell=ell)
     if spec.placement != "single":
         mesh = sess.engine.mesh
         print(f"placement: {spec.placement} over mesh "
@@ -158,9 +168,45 @@ def serve_reachability(n_nodes: int, avg_deg: float, n_queries: int,
           f"({dt / n_queries * 1e9:.0f} ns/query), {pos} positive, "
           f"{sess.trace_count} phase-1 traces")
     print(f"phase stats: {stats}")
+    update_stats = None
+    if n_updates > 0:
+        # live-graph churn loop: insert a batch, then answer a query slice
+        # against the mutated graph — no restart, no rebuild (DESIGN.md §6)
+        if sess.epoch or sess.stats.overlay_edges:
+            print(f"resumed at epoch {sess.epoch} with "
+                  f"{sess.stats.overlay_edges} replayed overlay edges",
+                  flush=True)
+        # fold the resume point into the seed: a rerun extends the replayed
+        # graph with FRESH edges instead of re-drawing (and deduping) the
+        # previous run's stream
+        rng = np.random.default_rng(
+            (seed + 2, sess.epoch, sess.stats.overlay_edges))
+        sess.reset_stats()
+        qcur = 0
+        t0 = time.perf_counter()
+        for lo in range(0, n_updates, update_batch):
+            b = min(update_batch, n_updates - lo)
+            # orient by the condensed topological order: inserts never
+            # close a condensed cycle, so auto-compactions stay on the
+            # bounded incremental path even on cyclic graphs
+            sess.apply_updates(*random_edge_inserts(
+                g.n, b, rng, order=sess.index.cond.comp))
+            hi_q = min(qcur + batch, n_queries)
+            if hi_q > qcur:
+                sess.query(qs[qcur:hi_q], qt[qcur:hi_q])
+                qcur = hi_q
+        dt_u = time.perf_counter() - t0
+        update_stats = sess.stats
+        print(f"{n_updates} edge inserts in {dt_u:.2f}s "
+              f"({n_updates / dt_u:.0f} updates/s interleaved with "
+              f"{qcur} queries), {update_stats.n_compactions} compactions, "
+              f"overlay fill {update_stats.overlay_edges}/"
+              f"{spec.overlay_cap}, epoch {sess.epoch}")
+        print(f"churn stats: {update_stats}")
     return {"seconds": dt, "ns_per_query": dt / n_queries * 1e9,
             "positive": pos, "stats": stats, "build_seconds": t_build,
             "loaded": loaded, "trace_count": sess.trace_count,
+            "update_stats": update_stats, "epoch": sess.epoch,
             "spec": spec}
 
 
@@ -204,6 +250,12 @@ def main():
     ap.add_argument("--index-dir", default=None,
                     help="load the index artifact from here if committed, "
                          "else build and save here")
+    ap.add_argument("--updates", type=int, default=0,
+                    help="stream this many random edge inserts through the "
+                         "live session, interleaved with query batches "
+                         "(logged + replayed when --index-dir is set)")
+    ap.add_argument("--update-batch", type=int, default=256,
+                    help="edge inserts per apply_updates() batch")
     IndexSpec.add_cli_args(ap)       # --k --variant --phase2 --max-batch ...
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--batch", type=int, default=4,
@@ -217,7 +269,9 @@ def main():
         spec = IndexSpec.from_args(args)
         serve_reachability(args.nodes, args.avg_deg, args.queries,
                            seed=args.seed, workload=args.workload,
-                           spec=spec, index_dir=args.index_dir)
+                           spec=spec, index_dir=args.index_dir,
+                           n_updates=args.updates,
+                           update_batch=args.update_batch)
     else:
         serve_lm(args.arch, args.batch, args.prompt_len, args.gen_len)
 

@@ -1,0 +1,26 @@
+"""repro.reach.dynamic — live-graph updates for a serving QuerySession.
+
+The static FERRARI index becomes a dynamic oracle in three pieces
+(DESIGN.md §6):
+
+  * :class:`DeltaOverlay` (overlay.py) — inserted edges as a fixed-capacity
+    device COO slab; queries answer ``base_index_hit OR bridge-BFS`` over
+    the union graph, sound and complete the moment ``apply_updates()``
+    returns.
+  * :func:`compact_index` (relabel.py) — bounded incremental relabeling:
+    when the overlay fills, only the labels of union-graph ancestors of the
+    inserted tails are recomputed, through the affected waves of the staged
+    ``core.build`` pipeline; full rebuild is the explicit fallback.
+  * epoch-versioned persistence (``reach.persist``) — an append-only delta
+    log beside the artifact plus an ``epoch`` manifest field, so
+    ``QuerySession.load`` replays to the current graph.
+
+Driven through ``QuerySession.apply_updates()`` / ``.compact()``; the
+pieces here stay importable for low-level use.
+"""
+from .overlay import DeltaOverlay, OverlayFull           # noqa: F401
+from .relabel import (COMPACT_MODES, affected_set,       # noqa: F401
+                      compact_index, union_dag)
+
+__all__ = ["DeltaOverlay", "OverlayFull", "compact_index", "affected_set",
+           "union_dag", "COMPACT_MODES"]

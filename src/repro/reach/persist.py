@@ -47,6 +47,7 @@ class IndexArtifact:
     packed: Optional[PackedIndex]
     ell: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]]
     manifest: dict
+    epoch: int = 0            # graph epoch: bumped by every compaction
 
 
 def _flatten_labels(labels, n_aug: int):
@@ -63,7 +64,7 @@ def save_index(path, index: FerrariIndex, spec: Optional[IndexSpec] = None,
                include_packed: bool = True,
                meta: Optional[dict] = None,
                packed: Optional[PackedIndex] = None,
-               ell=None) -> Path:
+               ell=None, epoch: int = 0) -> Path:
     """Persist ``index`` (and its serving layouts) under ``path``.
 
     Returns the committed step directory. ``spec`` travels in the manifest
@@ -74,6 +75,12 @@ def save_index(path, index: FerrariIndex, spec: Optional[IndexSpec] = None,
     ``ell`` (an (ell, tail_src, tail_dst) tuple) reuse already-built
     layouts — both are O(n) host loops, so a caller that also serves the
     fresh index should build them once and share (see launch/serve.py).
+
+    ``epoch`` is the graph epoch (DESIGN.md §6): 0 for a fresh build, and
+    bumped by every ``QuerySession.compact()``, which re-saves here under
+    ``step_<epoch>``. Edge inserts applied since are replayed from the
+    append-only delta log (``append_delta``/``load_deltas``) keyed by the
+    same epoch, so a loaded session always reaches the current graph.
     """
     tl, cond = index.tl, index.cond
     n_aug = tl.n + 1
@@ -98,6 +105,7 @@ def save_index(path, index: FerrariIndex, spec: Optional[IndexSpec] = None,
     extra = {
         "format_version": FORMAT_VERSION,
         "kind": "ferrari-index",
+        "epoch": int(epoch),
         "n_comp": int(cond.n_comp),
         "k": (None if index.k is None else int(index.k)),
         "variant": index.variant,
@@ -116,7 +124,7 @@ def save_index(path, index: FerrariIndex, spec: Optional[IndexSpec] = None,
         })
         extra["k_max"] = int(pk.k_max)
         extra["max_out_degree"] = int(pk.max_out_degree)
-    return save_checkpoint(path, step=0, state=state, extra=extra)
+    return save_checkpoint(path, step=int(epoch), state=state, extra=extra)
 
 
 def load_manifest(path, step: Optional[int] = None) -> dict:
@@ -195,4 +203,63 @@ def load_index(path, step: Optional[int] = None) -> IndexArtifact:
             max_out_degree=int(extra["max_out_degree"]))
         ell = (a["ell"], a["tail_src"], a["tail_dst"])
     return IndexArtifact(index=index, spec=spec, packed=packed, ell=ell,
-                         manifest=manifest)
+                         manifest=manifest,
+                         epoch=int(extra.get("epoch", 0)))
+
+
+# ------------------------------------------------------------ delta log --
+#
+# Edge inserts between compactions live in an append-only log BESIDE the
+# artifact steps: one npz per applied batch, named by the graph epoch it
+# extends. Compaction bumps the epoch and commits a new artifact step, so
+# older epochs' batches become inert history — never rewritten, never
+# deleted (append-only), just no longer selected by the loader.
+
+def delta_log_dir(path) -> Path:
+    return Path(path) / "deltas"
+
+
+def next_delta_seq(path, epoch: int) -> int:
+    """Number of log batches already on disk for ``epoch`` (= the next
+    sequence number). Sessions list once and count in memory after."""
+    d = delta_log_dir(path)
+    if not d.exists():
+        return 0
+    return len(list(d.glob(f"epoch_{int(epoch):08d}_*.npz")))
+
+
+def append_delta(path, epoch: int, src, dst,
+                 seq: Optional[int] = None) -> Path:
+    """Append one batch of ORIGINAL-id edge inserts to the delta log.
+
+    Original ids (not condensed) on purpose: a full-rebuild compaction can
+    change the SCC map, and replay re-condenses through whatever comp map
+    the loaded artifact carries. Atomic tmp-write + rename, sequence-
+    numbered within the epoch so replay order is total; ``seq=None``
+    re-derives the number by listing (QuerySession passes its in-memory
+    cursor instead — listing per append is O(log length)).
+    """
+    d = delta_log_dir(path)
+    d.mkdir(parents=True, exist_ok=True)
+    if seq is None:
+        seq = next_delta_seq(path, epoch)
+    out = d / f"epoch_{int(epoch):08d}_{seq:08d}.npz"
+    tmp = out.with_suffix(".npz.tmp")
+    with open(tmp, "wb") as f:
+        np.savez(f, src=np.asarray(src, dtype=np.int64),
+                 dst=np.asarray(dst, dtype=np.int64))
+    tmp.rename(out)
+    return out
+
+
+def load_deltas(path, epoch: int):
+    """The logged insert batches extending artifact ``epoch``, in append
+    order: a list of (src, dst) original-id arrays."""
+    d = delta_log_dir(path)
+    if not d.exists():
+        return []
+    out = []
+    for f in sorted(d.glob(f"epoch_{int(epoch):08d}_*.npz")):
+        with np.load(f) as z:
+            out.append((z["src"], z["dst"]))
+    return out

@@ -53,6 +53,11 @@ class SessionStats(ResettableStats):
     n_padded: int = 0
     seconds: float = 0.0
     buckets: Dict[int, int] = field(default_factory=dict)
+    # live-update path (reach.dynamic, DESIGN.md §6)
+    n_updates: int = 0           # delta edges accepted into the overlay
+    n_overlay_hits: int = 0      # base-NEG answers flipped POS by the overlay
+    n_compactions: int = 0       # overlay folds into the index
+    overlay_edges: int = 0       # current overlay fill (gauge, not counter)
 
     @property
     def ns_per_query(self) -> float:
@@ -82,6 +87,16 @@ class QuerySession:
         self._pending: List[Tuple[int, np.ndarray, np.ndarray]] = []
         self._next_ticket = 0
         self.artifact_manifest: Optional[dict] = None   # set by load()
+        self.epoch = 0                # graph epoch: bumped by compact()
+        self._artifact_dir = None     # set by load(); enables delta logging
+        # replay state (load()): not-yet-applied log batches + the tail of
+        # the batch being applied — a replay-triggered compaction re-logs
+        # both under the new epoch BEFORE committing its artifact, so no
+        # durably-logged edge can be orphaned by a crash (DESIGN.md §6.3)
+        self._replaying = False
+        self._replay_pending: List[Tuple[np.ndarray, np.ndarray]] = []
+        self._replay_tail = None
+        self._next_delta_seq = None   # per-epoch log cursor (lazy-listed)
         self.reset_stats()
 
     # ------------------------------------------------------------- loading
@@ -90,15 +105,32 @@ class QuerySession:
         """Open a session on a persisted index artifact (reach.persist).
 
         ``spec`` overrides the spec stored with the artifact; the stored
-        ELL layout is reused only when its width still matches.
+        ELL layout is reused only when its width still matches. Edge
+        inserts logged since the artifact's epoch replay into the overlay
+        (DESIGN.md §6), so the session serves the CURRENT graph — loads
+        stay seconds even while the graph churns.
         """
-        from .persist import load_index
+        from pathlib import Path
+
+        from .persist import load_deltas, load_index
         art = load_index(path)
         saved_width = None if art.spec is None else art.spec.ell_width
         use_spec = spec if spec is not None else (art.spec or IndexSpec())
         ell = art.ell if use_spec.ell_width == saved_width else None
         sess = cls(art.index, use_spec, packed=art.packed, ell=ell)
         sess.artifact_manifest = art.manifest
+        sess.epoch = art.epoch
+        sess._artifact_dir = Path(path)
+        sess._replaying = True
+        sess._replay_pending = load_deltas(path, art.epoch)
+        try:
+            while sess._replay_pending:
+                src, dst = sess._replay_pending.pop(0)
+                sess.apply_updates(src, dst)
+        finally:
+            sess._replaying = False
+            sess._replay_pending = []
+            sess._replay_tail = None
         return sess
 
     # ------------------------------------------------------------ querying
@@ -173,6 +205,184 @@ class QuerySession:
             lo += s.size
         return out
 
+    # -------------------------------------------------------- live updates
+    def bind_artifact(self, path, epoch: int = 0) -> None:
+        """Attach this session to an index artifact directory so
+        ``apply_updates`` appends to its delta log and ``compact``
+        persists new epochs. ``QuerySession.load`` binds automatically;
+        call this after a build-and-save (see launch/serve.py) so a
+        freshly built session gets the same durability."""
+        from pathlib import Path
+
+        from .persist import load_manifest
+        self._artifact_dir = Path(path)
+        self.epoch = epoch
+        # the log cursor belongs to the (dir, epoch) pair: force a re-list
+        # so binding never overwrites batches already on disk there
+        self._next_delta_seq = None
+        if self.artifact_manifest is None:
+            # carry the stored user_meta (graph identity): compact() re-saves
+            # it, keeping serve.py's artifact/graph mismatch guard alive on
+            # every later epoch
+            self.artifact_manifest = load_manifest(path)
+
+    def apply_updates(self, srcs, dsts) -> int:
+        """Insert edges (ORIGINAL node ids) into the live graph.
+
+        Answers reflect the inserts the moment this returns — no restart,
+        no rebuild: edges land in the engine's delta overlay (capacity
+        ``spec.overlay_cap``) and queries expand over the union graph
+        (reach.dynamic, DESIGN.md §6). When a batch needs more room than
+        the overlay has, ``compact()`` folds the overlay into the index
+        first (``spec.auto_compact``; otherwise this raises). Bound
+        sessions (``QuerySession.load``) also append every batch to the
+        artifact's delta log, so a later load replays to the same graph.
+
+        Returns the number of NEW edges accepted (self-loops within an
+        SCC and duplicates are dropped).
+        """
+        srcs = np.asarray(srcs, dtype=np.int64)
+        dsts = np.asarray(dsts, dtype=np.int64)
+        if srcs.shape != dsts.shape or srcs.ndim != 1:
+            raise ValueError("srcs/dsts must be equal-length 1-D arrays")
+        # validate BEFORE logging: a bad id must neither wrap through
+        # negative indexing nor poison the delta log (a logged bad batch
+        # would make every future load's replay raise)
+        n_orig = self.index.cond.comp.shape[0]
+        if srcs.size and (min(srcs.min(), dsts.min()) < 0
+                          or max(srcs.max(), dsts.max()) >= n_orig):
+            raise ValueError(
+                f"edge endpoint out of range [0, {n_orig}) — updates take "
+                "ORIGINAL node ids of the indexed graph")
+        if not self.spec.auto_compact and not self._replaying:
+            # all-or-nothing: DeltaOverlay.add is atomic (raises OverlayFull
+            # before mutating), so map the whole batch and apply in one
+            # call; log only after success — a rejected batch must neither
+            # partially serve nor reach the delta log
+            comp = self.index.cond.comp
+            ca, cb = comp[srcs], comp[dsts]
+            keep = ca != cb
+            applied = self.engine.apply_updates(ca[keep], cb[keep])
+            if self._artifact_dir is not None:
+                from .persist import append_delta
+                append_delta(self._artifact_dir, self.epoch, srcs, dsts,
+                             seq=self._take_delta_seq())
+            return applied
+        applied = 0
+        lo = 0
+        while lo < srcs.size:
+            if self._replaying:
+                self._replay_tail = (srcs[lo:], dsts[lo:])
+            ov = self.engine.overlay
+            free = self.engine.overlay_cap if ov is None else ov.free
+            if free == 0:
+                self._auto_compact()
+                continue
+            hi = min(lo + free, srcs.size)
+            s, d = srcs[lo:hi], dsts[lo:hi]
+            # chunks log BEFORE applying; replayed batches never re-log
+            # here — they are already durable under the artifact's epoch,
+            # and a replay-triggered compaction re-logs the unfolded rest
+            # under its new epoch itself (see compact())
+            if self._artifact_dir is not None and not self._replaying:
+                from .persist import append_delta
+                append_delta(self._artifact_dir, self.epoch, s, d,
+                             seq=self._take_delta_seq())
+            comp = self.index.cond.comp
+            ca, cb = comp[s], comp[d]
+            keep = ca != cb          # same-SCC edges change nothing
+            applied += self.engine.apply_updates(ca[keep], cb[keep])
+            lo = hi
+        if self._replaying:
+            self._replay_tail = None
+        return applied
+
+    def _take_delta_seq(self) -> int:
+        """Next sequence number in the current epoch's delta log — listed
+        from disk once, then counted in memory (an O(files) glob per
+        append would make sustained logging quadratic)."""
+        if self._next_delta_seq is None:
+            from .persist import next_delta_seq
+            self._next_delta_seq = next_delta_seq(self._artifact_dir,
+                                                  self.epoch)
+        seq = self._next_delta_seq
+        self._next_delta_seq += 1
+        return seq
+
+    def _auto_compact(self) -> None:
+        if not self.spec.auto_compact:
+            from .dynamic import OverlayFull
+            raise OverlayFull(
+                f"overlay full ({self.spec.overlay_cap} edges) and "
+                "auto_compact is off — call session.compact()")
+        self.compact()
+
+    def compact(self, mode: Optional[str] = None):
+        """Fold the delta overlay into the index (bounded incremental
+        relabeling — reach.dynamic.compact_index; DESIGN.md §6).
+
+        Recomputes only the labels of union-graph ancestors of the
+        inserted tails, re-running the staged core.build pipeline over the
+        affected waves; falls back to a full rebuild when an insert closed
+        a cycle (``mode`` defaults to ``spec.compact_mode``). The serving
+        engine is rebuilt on the new index — same spec, fresh packed
+        layouts — with the cumulative phase counters carried over. Bound
+        sessions persist the new index under the bumped epoch, so the
+        artifact + delta log always reconstruct the live graph. Returns
+        the new index's BuildStats.
+        """
+        from .dynamic import compact_index
+        ov = self.engine.overlay
+        esrc, edst = (ov.edges() if ov is not None
+                      else (np.zeros(0, np.int32), np.zeros(0, np.int32)))
+        new_ix = compact_index(self.index, esrc, edst, self.spec,
+                               mode=mode or self.spec.compact_mode)
+        from ..core.packed import pack_index
+        pk = pack_index(new_ix)
+        # pack the ELL layout once and share it between the fresh engine
+        # and the re-saved artifact (both would otherwise run their own
+        # O(n + m) host loop — the same share serve.py does on build)
+        p2 = self.spec.phase2_mode
+        if p2 == "auto":
+            p2 = ("sparse" if self.spec.placement != "single"
+                  else ("dense" if pk.n <= self.spec.n_dense_max
+                        else "sparse"))
+        ell = (pk.ell_layout(width=self.spec.ell_width)
+               if self._artifact_dir is not None or p2 == "sparse" else None)
+        stats = self.engine.stats           # carry phase mix across the swap
+        self.index = new_ix
+        self.engine = make_engine(new_ix, self.spec, packed=pk, ell=ell)
+        self.engine.stats = stats
+        self.engine.stats.n_compactions += 1
+        self.epoch += 1
+        self._next_delta_seq = 0     # fresh epoch — fresh log cursor
+        if self._artifact_dir is not None:
+            from .persist import append_delta, save_index
+            if self._replaying:
+                # a compaction mid-replay folds only the already-replayed
+                # prefix: re-log the in-flight batch tail and the pending
+                # log batches under the NEW epoch BEFORE committing its
+                # artifact. Log-then-commit ordering keeps every durably
+                # logged edge reachable across a crash either way: before
+                # the commit, the old epoch + its complete log win (the
+                # stray new-epoch entries are inert, and harmless later —
+                # inserts are idempotent); after it, the new epoch's log
+                # already holds its complete tail (DESIGN.md §6.3).
+                if self._replay_tail is not None \
+                        and self._replay_tail[0].size:
+                    append_delta(self._artifact_dir, self.epoch,
+                                 *self._replay_tail,
+                                 seq=self._take_delta_seq())
+                for s2, d2 in self._replay_pending:
+                    append_delta(self._artifact_dir, self.epoch, s2, d2,
+                                 seq=self._take_delta_seq())
+            meta = None
+            if self.artifact_manifest is not None:
+                meta = self.artifact_manifest["extra"].get("user_meta")
+            save_index(self._artifact_dir, new_ix, self.spec, meta=meta,
+                       packed=pk, ell=ell, epoch=self.epoch)
+        return new_ix.stats
+
     # ------------------------------------------------------------- warmup
     def warmup(self, *batch_sizes: int) -> None:
         """Trace the buckets the given batch sizes map to (using (0, 0)
@@ -224,6 +434,11 @@ class QuerySession:
             n_padded=self._n_padded,
             seconds=self._seconds,
             buckets=dict(self._buckets),
+            n_updates=es.n_updates,
+            n_overlay_hits=es.n_overlay_hits,
+            n_compactions=es.n_compactions,
+            overlay_edges=(0 if self.engine.overlay is None
+                           else self.engine.overlay.n_edges),
         )
 
     def reset_stats(self) -> None:

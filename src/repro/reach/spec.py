@@ -21,6 +21,7 @@ COVER_METHODS = ("greedy", "dp", "topgap")
 BUILDERS = ("host", "wavefront")
 PHASE2_MODES = ("auto", "dense", "sparse", "host")
 PLACEMENTS = ("single", "replicated", "sharded")
+COMPACT_MODES = ("auto", "incremental", "full")
 # the knobs baked into a built index — immutable once an artifact exists;
 # everything else is a serve-time knob a loader may freely override
 BUILD_FIELDS = ("k", "variant", "c", "cover_method", "n_seeds",
@@ -64,6 +65,10 @@ class IndexSpec:
     # ------------------------------------------------- session micro-batch
     max_batch: int = 16384
     min_bucket: int = 256
+    # -------------------------------------- live updates (DESIGN.md §6)
+    overlay_cap: int = 4096         # delta edges held before compaction
+    auto_compact: bool = True       # compact() when an insert needs room
+    compact_mode: str = "auto"      # auto | incremental | full
     # -------------------------------------------- placement (DESIGN.md §3.6)
     placement: str = "single"       # single | replicated | sharded
     mesh: Optional[str] = None      # "DATAxMODEL", e.g. "2x4"; None = default
@@ -130,6 +135,11 @@ class IndexSpec:
             raise ValueError("min_bucket must be >= 1")
         if self.max_batch < self.min_bucket:
             raise ValueError("max_batch must be >= min_bucket")
+        if self.overlay_cap < 1:
+            raise ValueError("overlay_cap must be >= 1")
+        if self.compact_mode not in COMPACT_MODES:
+            raise ValueError(f"compact_mode must be one of {COMPACT_MODES}, "
+                             f"got {self.compact_mode!r}")
         if self.placement not in PLACEMENTS:
             raise ValueError(f"placement must be one of {PLACEMENTS}, "
                              f"got {self.placement!r}")
@@ -229,6 +239,18 @@ class IndexSpec:
                         help="QuerySession micro-batch ceiling")
         ap.add_argument("--min-bucket", type=int, default=d.min_bucket,
                         help="smallest power-of-two padding bucket")
+        ap.add_argument("--overlay-cap", type=int, default=d.overlay_cap,
+                        help="delta-overlay slab capacity: edge inserts "
+                             "held beside the index before compaction "
+                             "(DESIGN.md §6)")
+        ap.add_argument("--no-auto-compact", action="store_true",
+                        help="raise instead of compacting when an insert "
+                             "exceeds the overlay capacity")
+        ap.add_argument("--compact-mode", default=d.compact_mode,
+                        choices=COMPACT_MODES,
+                        help="auto = bounded incremental relabeling with "
+                             "full-rebuild fallback on cycle-closing "
+                             "inserts")
         ap.add_argument("--placement", default=d.placement,
                         choices=PLACEMENTS,
                         help="index placement: single device, replicated "
@@ -261,6 +283,9 @@ class IndexSpec:
             frontier_cap_max=args.frontier_cap_max,
             max_batch=args.max_batch,
             min_bucket=args.min_bucket,
+            overlay_cap=args.overlay_cap,
+            auto_compact=not args.no_auto_compact,
+            compact_mode=args.compact_mode,
             placement=args.placement,
             mesh=args.mesh,
         )
@@ -291,6 +316,10 @@ class IndexSpec:
                  "--frontier-cap-max", str(self.frontier_cap_max),
                  "--max-batch", str(self.max_batch),
                  "--min-bucket", str(self.min_bucket),
+                 "--overlay-cap", str(self.overlay_cap)]
+        if not self.auto_compact:
+            argv.append("--no-auto-compact")
+        argv += ["--compact-mode", self.compact_mode,
                  "--placement", self.placement]
         if self.mesh is not None:
             argv += ["--mesh", self.mesh]
@@ -339,7 +368,8 @@ def make_engine(index, spec: IndexSpec = IndexSpec(), *, packed=None,
         n_dense_max=spec.n_dense_max, phase2_chunk=spec.phase2_chunk,
         use_pallas=spec.use_pallas, phase2_mode=spec.phase2_mode,
         ell_width=spec.ell_width, frontier_cap=spec.frontier_cap,
-        frontier_cap_max=spec.frontier_cap_max, packed=packed, ell=ell)
+        frontier_cap_max=spec.frontier_cap_max, packed=packed, ell=ell,
+        overlay_cap=spec.overlay_cap)
     if spec.placement == "single":
         from ..core.query_jax import DeviceQueryEngine
         return DeviceQueryEngine(index, **common)

@@ -60,6 +60,44 @@ def test_real_graph_cache_roundtrip(tmp_path, monkeypatch):
     assert g2.n == g.n and np.array_equal(g2.indices, g.indices)
 
 
+def test_cache_checksum_written_and_verified(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_GRAPH_CACHE", str(tmp_path))
+    monkeypatch.setattr(common, "_fetch",
+                        lambda url, timeout=20.0: "2\n0: 1 #\n1: #\n")
+    common.load_real_graph("go", verbose=False)
+    side = tmp_path / "go.npz.sha256"
+    assert side.exists()
+    assert side.read_text().strip() == common._sha256_file(
+        tmp_path / "go.npz")
+    # a clean reload passes verification
+    g = common.load_real_graph("go", verbose=False)
+    assert g.n == 2
+
+
+def test_cache_checksum_detects_corruption(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_GRAPH_CACHE", str(tmp_path))
+    monkeypatch.setattr(common, "_fetch",
+                        lambda url, timeout=20.0: "2\n0: 1 #\n1: #\n")
+    common.load_real_graph("go", verbose=False)
+    cache = tmp_path / "go.npz"
+    cache.write_bytes(b"garbage, not an npz")
+    with pytest.raises(RuntimeError, match="re-download"):
+        common.load_real_graph("go", verbose=False)
+
+
+def test_cache_checksum_adopts_legacy_cache(tmp_path, monkeypatch):
+    """A pre-manifest cache (npz, no sidecar) is adopted trust-on-first-use
+    instead of erroring."""
+    monkeypatch.setenv("REPRO_GRAPH_CACHE", str(tmp_path))
+    monkeypatch.setattr(common, "_fetch",
+                        lambda url, timeout=20.0: "2\n0: 1 #\n1: #\n")
+    common.load_real_graph("go", verbose=False)
+    (tmp_path / "go.npz.sha256").unlink()
+    g = common.load_real_graph("go", verbose=False)
+    assert g.n == 2
+    assert (tmp_path / "go.npz.sha256").exists()
+
+
 def test_get_graph_dispatches_real_names(monkeypatch, tmp_path):
     monkeypatch.setenv("REPRO_GRAPH_CACHE", str(tmp_path))
     monkeypatch.setattr(common, "_fetch",

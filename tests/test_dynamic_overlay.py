@@ -1,0 +1,351 @@
+"""Live-graph updates (reach.dynamic, DESIGN.md §6).
+
+Covers the ISSUE-5 acceptance criteria:
+
+  * insert-only correctness: after each batch of random edge inserts on an
+    n >= 20k scale-free DAG, session answers match brute-force reachability
+    on the mutated graph — no restart, no rebuild;
+  * compact() touches only the affected waves (asserted via BuildStats)
+    and leaves a 20k-query suite bit-identical to a from-scratch build at
+    the same budget k, including a save/load round-trip;
+  * epoch-versioned persistence: a bound session logs inserts and a
+    reload replays them to the same answers.
+
+Small-n engine parity across every phase-2 mode (dense / sparse / host),
+cycle-closing inserts, the update-path statistics counters, and jit
+trace stability under updates are covered here too.
+"""
+import numpy as np
+import pytest
+
+from repro import reach
+from repro.core.query import brute_force_closure, brute_force_reachable
+from repro.core.query_jax import DeviceQueryEngine
+from repro.graphs.csr import build_csr
+from repro.graphs.generators import random_dag, scale_free_digraph
+
+SEED = 20260730
+
+
+def _insert_batches(rng, n, n_batches, batch, dag_only=True):
+    """Random insert batches as (src, dst) original-id arrays."""
+    out = []
+    for _ in range(n_batches):
+        us = rng.integers(0, n, size=batch)
+        ud = rng.integers(0, n, size=batch)
+        if dag_only:
+            lo, hi = np.minimum(us, ud), np.maximum(us, ud)
+        else:
+            lo, hi = us, ud
+        keep = lo != hi
+        out.append((lo[keep], hi[keep]))
+    return out
+
+
+# ------------------------------------------------------- small-n parity --
+
+@pytest.mark.parametrize("mode", ["dense", "sparse", "host"])
+def test_overlay_matches_brute_force_all_modes(mode):
+    rng = np.random.default_rng(SEED)
+    n = 300
+    g = random_dag(n, 2.0, seed=1)
+    spec = reach.IndexSpec(k=2, variant="G", phase2_mode=mode,
+                           overlay_cap=256)
+    ix = reach.build(g, spec)
+    sess = reach.QuerySession(ix, spec)
+    se, de = map(list, g.edges())
+    for src, dst in _insert_batches(rng, n, 3, 15):
+        sess.apply_updates(src, dst)
+        se += list(src)
+        de += list(dst)
+        R = brute_force_closure(build_csr(n, np.array(se), np.array(de)))
+        qs = rng.integers(0, n, size=500)
+        qt = rng.integers(0, n, size=500)
+        assert (sess.query(qs, qt) == R[qs, qt]).all()
+
+
+@pytest.mark.parametrize("mode", ["dense", "sparse"])
+def test_overlay_cycle_closing_inserts(mode):
+    """Back edges make the union graph cyclic; overlay answers stay exact."""
+    rng = np.random.default_rng(SEED + 1)
+    n = 200
+    g = random_dag(n, 1.5, seed=3)
+    spec = reach.IndexSpec(k=2, variant="G", phase2_mode=mode,
+                           overlay_cap=64)
+    sess = reach.QuerySession(reach.build(g, spec), spec)
+    se, de = map(list, g.edges())
+    (src, dst), = _insert_batches(rng, n, 1, 20, dag_only=False)
+    # force at least one genuine cycle: reverse an existing edge
+    src = np.concatenate([src, [de[0]]])
+    dst = np.concatenate([dst, [se[0]]])
+    sess.apply_updates(src, dst)
+    se += list(src)
+    de += list(dst)
+    R = brute_force_closure(build_csr(n, np.array(se), np.array(de)))
+    qs = rng.integers(0, n, size=500)
+    qt = rng.integers(0, n, size=500)
+    assert (sess.query(qs, qt) == R[qs, qt]).all()
+
+
+def test_update_stats_counters_and_reset():
+    rng = np.random.default_rng(SEED + 2)
+    n = 300
+    g = random_dag(n, 2.0, seed=1)
+    spec = reach.IndexSpec(k=2, variant="G", phase2_mode="sparse",
+                           overlay_cap=64)
+    sess = reach.QuerySession(reach.build(g, spec), spec)
+    assert sess.stats.n_updates == 0
+    (src, dst), = _insert_batches(rng, n, 1, 40)
+    applied = sess.apply_updates(src, dst)
+    assert applied > 0
+    st = sess.stats
+    assert st.n_updates == applied
+    assert st.overlay_edges == applied
+    qs = rng.integers(0, n, size=2000)
+    qt = rng.integers(0, n, size=2000)
+    sess.query(qs, qt)
+    # ServeStats / QueryStats expose the counters and reset() covers them
+    from repro.core.query import QueryStats
+    from repro.core.query_jax import ServeStats
+    for cls in (ServeStats, QueryStats):
+        s = cls(n_updates=3, n_overlay_hits=2, n_compactions=1)
+        s.reset()
+        assert (s.n_updates, s.n_overlay_hits, s.n_compactions) == (0, 0, 0)
+    sess.reset_stats()
+    st = sess.stats
+    assert st.n_updates == 0 and st.n_overlay_hits == 0
+    assert st.overlay_edges == applied     # gauge, not a counter
+
+
+def test_overlay_flips_base_negative():
+    """An insert that connects two previously-unrelated components must
+    flip a phase-1 NEG into a positive, counted as an overlay hit."""
+    # two disjoint chains: 0->1->2 and 3->4->5
+    g = build_csr(6, [0, 1, 3, 4], [1, 2, 4, 5])
+    spec = reach.IndexSpec(k=2, variant="G", phase2_mode="sparse",
+                           n_seeds=4, overlay_cap=8)
+    sess = reach.QuerySession(reach.build(g, spec), spec)
+    assert not sess.query([2], [3])[0]
+    sess.apply_updates([2], [3])
+    assert sess.query([0], [5])[0]          # 0->1->2 -delta-> 3->4->5
+    assert sess.stats.n_overlay_hits >= 1
+    assert not sess.query([5], [0])[0]
+
+
+def test_no_retrace_across_updates():
+    """Fixed-capacity slabs: applying updates must not grow the phase-1
+    trace count, and repeated overlay expansions reuse their traces."""
+    rng = np.random.default_rng(SEED + 3)
+    n = 400
+    g = random_dag(n, 1.5, seed=2)
+    spec = reach.IndexSpec(k=2, variant="G", phase2_mode="sparse",
+                           overlay_cap=128, min_bucket=256, max_batch=1024)
+    sess = reach.QuerySession(reach.build(g, spec), spec)
+    qs = rng.integers(0, n, size=1024)
+    qt = rng.integers(0, n, size=1024)
+    sess.query(qs, qt)
+    t0 = sess.trace_count
+    for src, dst in _insert_batches(rng, n, 3, 20):
+        sess.apply_updates(src, dst)
+        sess.query(qs, qt)
+    assert sess.trace_count == t0
+
+
+def test_auto_compact_off_raises_atomically():
+    from repro.reach.dynamic import OverlayFull
+    g = random_dag(100, 1.5, seed=4)
+    spec = reach.IndexSpec(k=2, variant="G", phase2_mode="host",
+                           overlay_cap=4, auto_compact=False)
+    sess = reach.QuerySession(reach.build(g, spec), spec)
+    with pytest.raises(OverlayFull):
+        sess.apply_updates(np.arange(0, 12), np.arange(30, 42))
+    # all-or-nothing: nothing from the rejected batch is live
+    st = sess.stats
+    assert st.overlay_edges == 0 and st.n_updates == 0
+
+
+def test_bad_node_ids_rejected_before_anything_happens(tmp_path):
+    g = random_dag(100, 1.5, seed=4)
+    spec = reach.IndexSpec(k=2, variant="G", phase2_mode="host",
+                           overlay_cap=16)
+    ix = reach.build(g, spec)
+    reach.save_index(tmp_path, ix, spec)
+    sess = reach.QuerySession.load(tmp_path, spec)
+    for bad in ([[5, 100], [10, 3]], [[-1], [5]], [[5], [200]]):
+        with pytest.raises(ValueError, match="out of range"):
+            sess.apply_updates(np.asarray(bad[0]), np.asarray(bad[1]))
+    assert sess.stats.overlay_edges == 0
+    # nothing reached the delta log: a reload must not replay anything
+    from repro.reach.persist import load_deltas
+    assert load_deltas(tmp_path, sess.epoch) == []
+
+
+# ------------------------------------------- acceptance: n>=20k + compact --
+
+@pytest.fixture(scope="module")
+def big_dynamic():
+    """n=20k scale-free DAG, a host-built session, and 3 applied insert
+    batches (shared across the acceptance tests — the build is the
+    expensive part)."""
+    rng = np.random.default_rng(SEED + 10)
+    n = 20_000
+    g = scale_free_digraph(n, 1.3, seed=9, back_p=0.0)   # DAG: edges lo->hi
+    spec = reach.IndexSpec(k=2, variant="G", phase2_mode="sparse",
+                           overlay_cap=1024)
+    ix = reach.build(g, spec)
+    sess = reach.QuerySession(ix, spec)
+    se, de = g.edges()
+    batches = _insert_batches(rng, n, 3, 100)
+    return dict(rng=rng, n=n, g=g, spec=spec, sess=sess,
+                se=list(se), de=list(de), batches=batches)
+
+
+def test_acceptance_inserts_match_brute_force(big_dynamic):
+    d = big_dynamic
+    rng, n, sess = d["rng"], d["n"], d["sess"]
+    for src, dst in d["batches"]:
+        applied = sess.apply_updates(src, dst)
+        assert applied > 0
+        d["se"] += list(src)
+        d["de"] += list(dst)
+        gu = build_csr(n, np.array(d["se"]), np.array(d["de"]))
+        qs = rng.integers(0, n, size=150)
+        qt = rng.integers(0, n, size=150)
+        ans = sess.query(qs, qt)
+        exp = np.fromiter(
+            (brute_force_reachable(gu.indptr, gu.indices, int(a), int(b))
+             for a, b in zip(qs, qt)), dtype=bool, count=qs.size)
+        assert (ans == exp).all()
+    assert sess.stats.n_compactions == 0       # overlay held every batch
+    d["applied"] = True
+
+
+def _ensure_applied(d):
+    if not d.get("applied"):                   # running this test standalone
+        for src, dst in d["batches"]:
+            d["sess"].apply_updates(src, dst)
+            d["se"] += list(src)
+            d["de"] += list(dst)
+        d["applied"] = True
+    if "gu" not in d:
+        d["gu"] = build_csr(d["n"], np.array(d["se"]), np.array(d["de"]))
+
+
+def test_acceptance_compact_affected_waves_and_bit_identity(
+        big_dynamic, tmp_path):
+    d = big_dynamic
+    n, sess, spec = d["n"], d["sess"], d["spec"]
+    _ensure_applied(d)
+    cstats = sess.compact()
+    # bounded incremental relabeling, not a rebuild: only affected waves ran
+    assert cstats.builder == "compact"
+    assert cstats.affected_nodes < sess.index.cond.n_comp
+    assert 0 < cstats.waves_touched <= cstats.waves_total
+    assert sess.stats.overlay_edges == 0
+    assert sess.stats.n_compactions == 1
+
+    # 20k-query suite: bit-identical to a from-scratch build at the same k
+    rng = np.random.default_rng(SEED + 20)
+    qs = rng.integers(0, n, size=20_000)
+    qt = rng.integers(0, n, size=20_000)
+    ans_compact = sess.query(qs, qt)
+    ix_fresh = reach.build(d["gu"], spec)
+    sess_fresh = reach.QuerySession(ix_fresh, spec)
+    ans_fresh = sess_fresh.query(qs, qt)
+    assert (ans_compact == ans_fresh).all()
+
+    # ... and across a save/load round-trip of the compacted index
+    reach.save_index(tmp_path / "idx", sess.index, spec, epoch=sess.epoch)
+    sess_loaded = reach.QuerySession.load(tmp_path / "idx", spec)
+    assert (sess_loaded.query(qs, qt) == ans_compact).all()
+
+
+# ------------------------------------------------------- epoch + replay --
+
+def test_epoch_replay_and_compact_persistence(tmp_path):
+    rng = np.random.default_rng(SEED + 30)
+    n = 600
+    g = scale_free_digraph(n, 2.0, seed=5, back_p=0.0)
+    spec = reach.IndexSpec(k=2, variant="G", phase2_mode="sparse",
+                           overlay_cap=32)
+    ix = reach.build(g, spec)
+    reach.save_index(tmp_path, ix, spec)
+    sess = reach.QuerySession.load(tmp_path, spec)
+    assert sess.epoch == 0
+    for src, dst in _insert_batches(rng, n, 4, 20):
+        sess.apply_updates(src, dst)     # cap 32 -> forces auto-compactions
+    assert sess.stats.n_compactions >= 1
+    assert sess.epoch == sess.stats.n_compactions
+    qs = rng.integers(0, n, size=3000)
+    qt = rng.integers(0, n, size=3000)
+    ans = sess.query(qs, qt)
+
+    # a reload lands on the latest compacted epoch + replays the log tail
+    sess2 = reach.QuerySession.load(tmp_path, spec)
+    assert sess2.epoch == sess.epoch
+    assert sess2.stats.overlay_edges == sess.stats.overlay_edges
+    assert (sess2.query(qs, qt) == ans).all()
+
+    # compacting the replayed session changes nothing about the answers
+    sess2.compact()
+    assert sess2.stats.overlay_edges == 0
+    assert (sess2.query(qs, qt) == ans).all()
+    sess3 = reach.QuerySession.load(tmp_path, spec)
+    assert sess3.epoch == sess2.epoch
+    assert (sess3.query(qs, qt) == ans).all()
+
+
+def test_bind_after_compact_does_not_overwrite_existing_log(tmp_path):
+    """A session that compacted while unbound carries epoch=1 and a fresh
+    log cursor; binding it to a dir that already holds epoch-1 batches
+    must re-list instead of overwriting them."""
+    from repro.reach.persist import load_deltas
+    g = random_dag(200, 1.5, seed=7)
+    spec = reach.IndexSpec(k=2, variant="G", phase2_mode="host",
+                           overlay_cap=4)
+    ix = reach.build(g, spec)
+    reach.save_index(tmp_path, ix, spec)
+    sess = reach.QuerySession.load(tmp_path, spec)
+    sess.apply_updates([0, 1, 2, 3, 4], [9, 10, 11, 12, 13])  # compacts
+    assert sess.epoch == 1
+    sess.apply_updates([5], [14])          # logged under epoch 1
+    n_before = len(load_deltas(tmp_path, 1))
+    assert n_before >= 1
+
+    other = reach.QuerySession(ix, spec)
+    other.compact()                        # unbound: epoch 1, cursor 0
+    other.bind_artifact(tmp_path, epoch=1)
+    other.apply_updates([6], [15])
+    assert len(load_deltas(tmp_path, 1)) == n_before + 1   # appended, not
+    #                                                        overwritten
+
+
+def test_replay_with_smaller_cap_compacts_without_losing_edges(tmp_path):
+    """Loading with a smaller overlay_cap than the delta log was written
+    under forces compactions MID-replay; the unfolded tail must be
+    re-logged under the new epoch before its artifact commits, so answers
+    (and further reloads) keep every logged edge (DESIGN.md §6.3)."""
+    rng = np.random.default_rng(SEED + 40)
+    n = 500
+    g = scale_free_digraph(n, 2.0, seed=6, back_p=0.0)
+    spec = reach.IndexSpec(k=2, variant="G", phase2_mode="sparse",
+                           overlay_cap=64)
+    ix = reach.build(g, spec)
+    reach.save_index(tmp_path, ix, spec)
+    sess = reach.QuerySession.load(tmp_path, spec)
+    for src, dst in _insert_batches(rng, n, 3, 18):
+        sess.apply_updates(src, dst)
+    assert sess.stats.n_compactions == 0       # all 3 batches fit cap 64
+    qs = rng.integers(0, n, size=3000)
+    qt = rng.integers(0, n, size=3000)
+    ans = sess.query(qs, qt)
+
+    small = reach.IndexSpec(k=2, variant="G", phase2_mode="sparse",
+                            overlay_cap=16)
+    sess2 = reach.QuerySession.load(tmp_path, small)
+    assert sess2.stats.n_compactions >= 1      # compacted mid-replay
+    assert (sess2.query(qs, qt) == ans).all()
+    # the re-logged tail survives yet another load at the new epoch
+    sess3 = reach.QuerySession.load(tmp_path, small)
+    assert sess3.epoch == sess2.epoch
+    assert (sess3.query(qs, qt) == ans).all()

@@ -1,0 +1,93 @@
+"""Property tests for live-graph updates (DESIGN.md §6, §5 contract).
+
+For random DAGs and random insert streams, at EVERY step the overlay
+session must answer exactly like a from-scratch rebuild of the mutated
+graph (here: brute-force closure — the rebuild's ground truth), and after
+``compact()`` the answers must be bit-identical to before, including a
+save/load round-trip of the compacted artifact.
+
+Runs under real hypothesis when installed, else the deterministic
+``tests/_hyp`` shim.
+"""
+import tempfile
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                                   # tier-1 bare env
+    from _hyp import given, settings, st
+
+from repro import reach
+from repro.core.query import brute_force_closure
+from repro.graphs.csr import build_csr
+from repro.graphs.generators import random_dag
+
+
+def _stream(rng, n, n_batches, batch, back_p):
+    for _ in range(n_batches):
+        us = rng.integers(0, n, size=batch)
+        ud = rng.integers(0, n, size=batch)
+        back = rng.random(batch) < back_p
+        lo = np.where(back, np.maximum(us, ud), np.minimum(us, ud))
+        hi = np.where(back, np.minimum(us, ud), np.maximum(us, ud))
+        keep = lo != hi
+        yield lo[keep], hi[keep]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n=st.integers(40, 160),
+       avg_deg=st.floats(0.5, 2.5),
+       batch=st.integers(1, 25),
+       back_p=st.floats(0.0, 0.4),
+       mode=st.sampled_from(["dense", "sparse"]),
+       variant=st.sampled_from(["L", "G"]))
+def test_overlay_equals_rebuild_at_every_step(seed, n, avg_deg, batch,
+                                              back_p, mode, variant):
+    rng = np.random.default_rng(seed)
+    g = random_dag(n, avg_deg, seed=seed + 1)
+    spec = reach.IndexSpec(k=2, variant=variant, phase2_mode=mode,
+                           n_seeds=8, overlay_cap=128)
+    sess = reach.QuerySession(reach.build(g, spec), spec)
+    se, de = map(list, g.edges())
+    qs = rng.integers(0, n, size=300)
+    qt = rng.integers(0, n, size=300)
+    for src, dst in _stream(rng, n, 3, batch, back_p):
+        sess.apply_updates(src, dst)
+        se += list(src)
+        de += list(dst)
+        R = brute_force_closure(build_csr(n, np.array(se), np.array(de)))
+        assert (sess.query(qs, qt) == R[qs, qt]).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n=st.integers(60, 200),
+       back_p=st.floats(0.0, 0.3),
+       mode=st.sampled_from(["auto", "incremental", "full"]))
+def test_compact_bit_identical_incl_save_load(seed, n, back_p, mode):
+    if mode == "incremental" and back_p > 0:
+        back_p = 0.0             # cycle-closing streams need the fallback
+    rng = np.random.default_rng(seed)
+    g = random_dag(n, 1.5, seed=seed + 2)
+    spec = reach.IndexSpec(k=2, variant="G", phase2_mode="sparse",
+                           n_seeds=8, overlay_cap=128)
+    sess = reach.QuerySession(reach.build(g, spec), spec)
+    for src, dst in _stream(rng, n, 2, 20, back_p):
+        sess.apply_updates(src, dst)
+    qs = rng.integers(0, n, size=500)
+    qt = rng.integers(0, n, size=500)
+    before = sess.query(qs, qt)
+    cstats = sess.compact(mode=mode)
+    assert sess.stats.overlay_edges == 0
+    if mode == "incremental":
+        assert cstats.builder == "compact"
+    after = sess.query(qs, qt)
+    assert (after == before).all()
+    # save/load round-trip of the compacted index answers identically
+    with tempfile.TemporaryDirectory() as tmp:
+        reach.save_index(tmp, sess.index, spec, epoch=sess.epoch)
+        sess2 = reach.QuerySession.load(tmp, spec)
+        assert (sess2.query(qs, qt) == before).all()

@@ -31,6 +31,8 @@ from repro.graphs.generators import scale_free_digraph
     dict(frontier_cap=1024, frontier_cap_max=512),
     dict(min_bucket=0),
     dict(max_batch=128, min_bucket=256),
+    dict(overlay_cap=0),
+    dict(compact_mode="sometimes"),
     dict(placement="multihost"),
     dict(mesh="2x4"),                         # mesh requires a placement
     dict(placement="sharded", mesh="2y4"),    # not DATAxMODEL
@@ -60,6 +62,10 @@ SPECS = [
     reach.IndexSpec(placement="replicated"),
     reach.IndexSpec(k=1, variant="L", phase2_mode="sparse",
                     placement="sharded", mesh="2x4"),
+    reach.IndexSpec(overlay_cap=128, auto_compact=False,
+                    compact_mode="incremental"),
+    reach.IndexSpec(k=3, variant="G", compact_mode="full",
+                    overlay_cap=1 << 16),
 ]
 
 
