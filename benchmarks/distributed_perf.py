@@ -104,10 +104,78 @@ def run_bench_json(out_path: str = "BENCH_distributed.json",
               f"ici={entry['ici_bytes_per_query']:5.1f} B/q  "
               f"hbm_rows={entry['hbm_row_bytes_per_query']:6.1f} B/q",
               flush=True)
+    if n_dev >= 4:
+        out["residue_balance"] = run_residue_balance(
+            n_queries=max(2_000, n_queries // 10), seed=seed)
     with open(out_path, "w") as f:
         json.dump(out, f, indent=1)
     print(f"wrote {out_path}", flush=True)
     return out
+
+
+def run_residue_balance(n_nodes: int = 30_000, n_queries: int = 5_000,
+                        seed: int = 0):
+    """Phase-2 residue load balance A/B (ROADMAP: all-to-all compaction).
+
+    The distributed engine block-partitions each phase-2 chunk
+    contiguously over the data axis, so a residue whose expensive entries
+    cluster — here forced by sorting the UNKNOWN queries by source depth
+    on a layered DAG, a stand-in for any workload with locality — lands
+    its whole hot tail on one data shard while the rest idle at the psum
+    barrier. ``DistributedQueryEngine.balance_residue`` round-robin
+    interleaves each chunk across the shards before dispatch (and
+    inverse-permutes the answers), which this section measures: same
+    residue, same mesh, balance off vs on, answers asserted identical.
+    """
+    import numpy as np
+
+    import jax
+    from repro.core.workload import random_queries
+    from repro.graphs.generators import layered_dag
+    from repro.kernels import ops
+    from repro.reach import IndexSpec, QuerySession, build
+
+    n_dev = len(jax.devices())
+    n_dp = max(2, n_dev // 2)
+    mesh = f"{n_dp}x{n_dev // n_dp}"
+    # weak index on a deep layered DAG: a large residue whose per-query
+    # BFS cost varies with source depth — the skew knob
+    g = layered_dag(n_nodes, 80, 2.5, seed=seed)
+    spec = IndexSpec(k=1, variant="L", n_seeds=16, phase2_mode="sparse",
+                     max_batch=8192, placement="sharded", mesh=mesh)
+    sess = QuerySession(build(g, spec), spec)
+    eng = sess.engine
+    qs, qt = random_queries(g, n_queries, seed=seed + 3)
+    v, _, _ = eng.classify(qs, qt)               # untimed residue isolation
+    unk = np.flatnonzero(np.asarray(v) == ops.UNKNOWN)
+    entry = {"mesh": mesh, "n_dp": n_dp, "residue": int(unk.size)}
+    if unk.size < 2 * n_dp:
+        entry["skipped"] = "residue too small"
+        return entry
+    # adversarial order: cluster by source id (≈ topo depth on a layered
+    # DAG) so contiguous blocks get homogeneous — and unequal — work
+    order = unk[np.argsort(qs[unk], kind="stable")]
+    uq, ut = qs[order], qt[order]
+    eng.answer(uq[:256], ut[:256])               # jit warmup (both modes
+    want = None                                  # share the same traces)
+    for balanced in (False, True):
+        eng.balance_residue = balanced
+        t0 = time.perf_counter()
+        ans = eng.answer(uq, ut)
+        dt = time.perf_counter() - t0
+        if want is None:
+            want = ans
+        assert np.array_equal(want, ans), \
+            "balance_residue changed answers!"
+        key = "balanced" if balanced else "unbalanced"
+        entry[f"{key}_ns_per_query"] = dt / uq.size * 1e9
+        print(f"residue-balance mesh={mesh} {key:10s} "
+              f"{entry[f'{key}_ns_per_query']:9.0f} ns/q "
+              f"(residue={unk.size})", flush=True)
+    eng.balance_residue = True
+    entry["speedup"] = (entry["unbalanced_ns_per_query"]
+                        / entry["balanced_ns_per_query"])
+    return entry
 
 
 def main():

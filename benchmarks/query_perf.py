@@ -146,9 +146,15 @@ def run_bench_json(out_path: str = "BENCH_query.json", datasets=None,
     out = {"k": k, "n_queries": n_queries, "datasets": {}}
     for name in datasets:
         g = get_graph(name)
-        # host phase-2 on the 1-core CPU proxy (same rationale as run());
-        # device phase-2 is measured by run_phase2_scale
-        spec = IndexSpec(k=k, variant="G", phase2_mode="host")
+        # phase2_mode="auto": dense device BFS at n <= n_dense_max, sparse
+        # ELL frontier above. (This bench once copied run()'s
+        # phase2_mode="host" proxy rationale — correct there, where the
+        # host engine IS the comparison subject, but here it silently
+        # benchmarked the per-query host DFS for the whole phase-2
+        # residue: BENCH_query.json showed phase2_host == phase2_queries
+        # on go-like even though n=6793 serves dense. The serving bench
+        # must measure the serving path.)
+        spec = IndexSpec(k=k, variant="G", phase2_mode="auto")
         with Timer() as tb:
             ix = build(g, spec)
         sess = QuerySession(ix, spec)
@@ -168,6 +174,8 @@ def run_bench_json(out_path: str = "BENCH_query.json", datasets=None,
                 "ns_per_query": t.seconds / n_queries * 1e9,
                 "phase1_pos": st.phase1_pos, "phase1_neg": st.phase1_neg,
                 "phase2_queries": st.phase2_queries,
+                "phase2_dense": st.phase2_dense,
+                "phase2_sparse": st.phase2_sparse,
                 "phase2_host": st.phase2_host,
                 "n_batches": st.n_batches, "n_padded": st.n_padded,
                 "trace_count": sess.trace_count,

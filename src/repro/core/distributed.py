@@ -263,6 +263,7 @@ class DistributedQueryEngine(DeviceQueryEngine):
         self.placement = placement
         self.mesh = make_serving_mesh(placement, mesh_shape)
         self.dp_axes = dp_axes
+        self.balance_residue = True   # phase-2 all-to-all (_residue_perm)
         dp = tuple(a for a in dp_axes if a in self.mesh.shape)
         self.n_dp = int(np.prod([self.mesh.shape[a] for a in dp])) if dp else 1
         n_model = int(self.mesh.shape["model"])
@@ -322,6 +323,11 @@ class DistributedQueryEngine(DeviceQueryEngine):
                                       jnp.asarray(cs), jnp.asarray(ct))
         return verdict[:q], jnp.asarray(cs[:q]), jnp.asarray(ct[:q])
 
+    def stage_queries(self, srcs, dsts):
+        # sharded classify pads to the data-axis multiple and device-places
+        # per shard itself; staging keeps the batch on host
+        return (np.asarray(srcs, np.int64), np.asarray(dsts, np.int64))
+
     # --------------------------------------------------------------- phase 2
     def _ell_sharded(self):
         """Padded + device-placed ELL state: slab rows over 'model', the
@@ -348,6 +354,35 @@ class DistributedQueryEngine(DeviceQueryEngine):
         # per-data-shard key packing bound × the number of query shards
         local = min(self.phase2_chunk, kfrontier.max_batch(self.n_pad))
         return local * self.n_dp
+
+    def _residue_perm(self, q: int):
+        """Phase-2 load balance: all-to-all compaction of the UNKNOWN
+        residue across the data shards (ROADMAP item; measured by
+        benchmarks/distributed_perf.py).
+
+        The expansion shards each chunk in CONTIGUOUS blocks over the
+        data axes, and a data row's while_loop runs until its own
+        block's last frontier empties — so a residue whose difficulty
+        correlates with query order (a burst of deep queries from one
+        tenant, a stream sorted by source depth) lands its whole hard
+        tail on one shard while the rest sit idle at the chunk barrier.
+        Interleaving round-robin (entry i → shard i mod D) hands every
+        shard a uniform stride-sample of the residue, so per-shard BFS
+        trip counts concentrate toward the mean. The permutation is
+        host-side (the residue is already host-resident between the
+        phases), grouped per expansion chunk so blocks stay aligned with
+        the shard_map partitioning; results scatter back through it in
+        ``_sparse_driver``. ``balance_residue=False`` disables it for
+        A/B measurement."""
+        if self.n_dp <= 1 or q <= 1 or not self.balance_residue:
+            return None
+        chunk = self._phase2_chunk_size()
+        perm = np.empty(q, dtype=np.int64)
+        for lo in range(0, q, chunk):
+            m = min(chunk, q - lo)
+            perm[lo:lo + m] = lo + np.argsort(
+                np.arange(m, dtype=np.int64) % self.n_dp, kind="stable")
+        return perm
 
     def _expand_chunk(self, cs_j, ct_j, pad: np.ndarray, cap: int):
         ell, tsrc, tdst, is_hub = self._ell_sharded()

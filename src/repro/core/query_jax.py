@@ -197,6 +197,14 @@ class DeviceQueryEngine:
         verdict = self._classify_exec(self.dev, cs, ct)
         return verdict, cs, ct
 
+    def stage_queries(self, srcs, dsts):
+        """Start the host→device transfer of a query batch (asynchronous)
+        and return arrays ``classify`` accepts. The serving frontend
+        stages batch N+1 here while batch N's classify is in flight
+        (double-buffered query slabs)."""
+        return (jax.device_put(np.asarray(srcs, np.int64)),
+                jax.device_put(np.asarray(dsts, np.int64)))
+
     # ------------------------------------------------------- live updates
     def apply_updates(self, csrc, cdst) -> int:
         """Append condensed-id edges to the delta overlay (creating it on
@@ -229,7 +237,23 @@ class DeviceQueryEngine:
 
     # ------------------------------------------------------------------ API
     def answer(self, srcs, dsts) -> np.ndarray:
-        verdict, cs, ct = self.classify(srcs, dsts)
+        return self.finish_answer(self.start_answer(srcs, dsts))
+
+    def start_answer(self, srcs, dsts):
+        """Dispatch phase 1 without blocking on its result.
+
+        jax dispatch is asynchronous: the returned verdict is a device
+        future, so the caller can overlap host work (staging the NEXT
+        batch's host→device transfer — see ``QuerySession.begin``/
+        ``finish`` and the frontend's double-buffered slabs) against the
+        classify compute before calling ``finish_answer``.
+        """
+        return self.classify(srcs, dsts)
+
+    def finish_answer(self, handle) -> np.ndarray:
+        """Block on a ``start_answer`` handle and run phase 2 on the
+        UNKNOWN residue. ``answer()`` is exactly start + finish."""
+        verdict, cs, ct = handle
         verdict = np.asarray(verdict)
         out = verdict == ops.POS
         neg_mask = verdict == ops.NEG
@@ -343,6 +367,13 @@ class DeviceQueryEngine:
             jnp.asarray(pad), max_steps=self.max_steps, cap=cap)
         return np.asarray(p), bool(ovf)
 
+    def _residue_perm(self, q: int) -> Optional[np.ndarray]:
+        """Optional permutation of the phase-2 residue before chunking
+        (results are scattered back through it). The multi-device engine
+        interleaves here so a difficulty-skewed residue spreads evenly
+        over the data shards instead of idling all but one of them."""
+        return None
+
     def _sparse_driver(self, cs_u: np.ndarray, ct_u: np.ndarray,
                        expand_fn, host_fn) -> np.ndarray:
         """Chunked expansion with the overflow-retry / terminal-host-
@@ -350,6 +381,9 @@ class DeviceQueryEngine:
         frontier expansion; ``host_fn(cs, ct)`` resolves queries past
         ``frontier_cap_max`` (the base guided DFS, or the union-graph BFS
         when an overlay is live)."""
+        perm = self._residue_perm(cs_u.size)
+        if perm is not None:
+            cs_u, ct_u = cs_u[perm], ct_u[perm]
         chunk = self._phase2_chunk_size()
         res = np.zeros(cs_u.size, dtype=bool)
         self.stats.phase2_sparse += cs_u.size
@@ -384,6 +418,10 @@ class DeviceQueryEngine:
                 if pad.all():
                     break       # every live query already proved positive
             res[lo:hi] = pos[:q]
+        if perm is not None:
+            out = np.empty_like(res)
+            out[perm] = res
+            return out
         return res
 
     def _phase2_sparse(self, cs_u: np.ndarray, ct_u: np.ndarray) -> np.ndarray:

@@ -47,7 +47,8 @@ def serve_reachability(n_nodes: int, avg_deg: float, n_queries: int,
                        use_seeds: bool = True,
                        spec: IndexSpec | None = None,
                        index_dir: str | None = None,
-                       n_updates: int = 0, update_batch: int = 256):
+                       n_updates: int = 0, update_batch: int = 256,
+                       n_tenants: int = 0, request_size: int = 64):
     """Serve a synthetic reachability workload through the facade.
 
     ``spec`` is the one source of truth; the individual knob kwargs
@@ -62,6 +63,16 @@ def serve_reachability(n_nodes: int, avg_deg: float, n_queries: int,
     Bound sessions (--index-dir) log every batch to the artifact's delta
     log; a rerun replays them on load, so the served graph keeps growing
     across restarts.
+
+    ``n_tenants > 0`` re-serves the workload through the async frontend
+    (DESIGN.md §7): the stream is chopped into ``request_size``-pair
+    requests spread round-robin over the tenants and pushed through the
+    deadline-aware coalescing loop — admission backpressure drives the
+    loop instead of growing a queue — and the FrontendStats snapshot
+    (per-tenant p50/p99, deadline misses, occupancy, cache hit rate) is
+    printed and returned. ``spec.deadline_us`` / ``spec.tenant_queue_cap``
+    / ``spec.cache_entries`` are the knobs (``--deadline-us``,
+    ``--tenant-queue-cap``, ``--cache``).
     """
     if spec is None:
         spec = IndexSpec(k=(None if variant == "full" else k),
@@ -168,6 +179,44 @@ def serve_reachability(n_nodes: int, avg_deg: float, n_queries: int,
           f"({dt / n_queries * 1e9:.0f} ns/query), {pos} positive, "
           f"{sess.trace_count} phase-1 traces")
     print(f"phase stats: {stats}")
+    frontend_stats = None
+    if n_tenants > 0:
+        from ..reach import Frontend, Rejected
+        fe = Frontend(sess)
+        backpressure = 0
+        t0 = time.perf_counter()
+        for i, lo in enumerate(range(0, n_queries, request_size)):
+            tenant = f"tenant-{i % n_tenants}"
+            s, d = qs[lo:lo + request_size], qt[lo:lo + request_size]
+            while True:
+                try:
+                    fe.submit(tenant, s, d)
+                    break
+                except Rejected:
+                    # bounded queues: drain the loop instead of growing
+                    backpressure += 1
+                    fe.poll()
+        served = sum(a.size for a in fe.drain().values())
+        dt_f = time.perf_counter() - t0
+        frontend_stats = fe.stats
+        print(f"frontend: {served} queries over {n_tenants} tenants "
+              f"({request_size}/request) in {dt_f * 1e3:.1f} ms "
+              f"({dt_f / max(served, 1) * 1e9:.0f} ns/query), "
+              f"{backpressure} backpressure stalls, "
+              f"occupancy {frontend_stats.occupancy:.3f}, "
+              f"{frontend_stats.deadline_misses} deadline misses")
+        for name in sorted(frontend_stats.tenants):
+            t = frontend_stats.tenants[name]
+            print(f"  {name}: {t.completed}/{t.requests} requests "
+                  f"p50={t.p50_us:.0f}us p99={t.p99_us:.0f}us "
+                  f"misses={t.deadline_misses} "
+                  f"cache_hits={t.cache_short_circuits}")
+        if frontend_stats.cache is not None:
+            c = frontend_stats.cache
+            print(f"  cache: {c['entries']}/{c['capacity']} entries, "
+                  f"hit_rate={c['hit_rate']:.3f}, "
+                  f"{c['evictions']} evictions, "
+                  f"{c['invalidations']} invalidations")
     update_stats = None
     if n_updates > 0:
         # live-graph churn loop: insert a batch, then answer a query slice
@@ -207,7 +256,7 @@ def serve_reachability(n_nodes: int, avg_deg: float, n_queries: int,
             "positive": pos, "stats": stats, "build_seconds": t_build,
             "loaded": loaded, "trace_count": sess.trace_count,
             "update_stats": update_stats, "epoch": sess.epoch,
-            "spec": spec}
+            "frontend_stats": frontend_stats, "spec": spec}
 
 
 def serve_lm(arch: str, batch: int, prompt_len: int, gen_len: int):
@@ -256,6 +305,12 @@ def main():
                          "(logged + replayed when --index-dir is set)")
     ap.add_argument("--update-batch", type=int, default=256,
                     help="edge inserts per apply_updates() batch")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="also serve the stream through the async "
+                         "frontend (DESIGN.md §7) spread over this many "
+                         "tenants (0 = skip)")
+    ap.add_argument("--request-size", type=int, default=64,
+                    help="query pairs per frontend request")
     IndexSpec.add_cli_args(ap)       # --k --variant --phase2 --max-batch ...
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--batch", type=int, default=4,
@@ -271,7 +326,9 @@ def main():
                            seed=args.seed, workload=args.workload,
                            spec=spec, index_dir=args.index_dir,
                            n_updates=args.updates,
-                           update_batch=args.update_batch)
+                           update_batch=args.update_batch,
+                           n_tenants=args.tenants,
+                           request_size=args.request_size)
     else:
         serve_lm(args.arch, args.batch, args.prompt_len, args.gen_len)
 

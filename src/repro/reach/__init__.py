@@ -22,6 +22,7 @@ The underlying pieces (``core.ferrari.build_index``,
 low-level use, but every driver in ``launch/``, ``benchmarks/`` and
 ``examples/`` goes through this facade.
 """
+from .frontend import Frontend, FrontendStats, Rejected     # noqa: F401
 from .persist import (IndexArtifact, load_index, load_manifest,  # noqa: F401
                       save_index)
 from .session import QuerySession, SessionStats             # noqa: F401
@@ -31,4 +32,5 @@ __all__ = [
     "IndexSpec", "build", "make_engine",
     "save_index", "load_index", "load_manifest", "IndexArtifact",
     "QuerySession", "SessionStats",
+    "Frontend", "FrontendStats", "Rejected",
 ]

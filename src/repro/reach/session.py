@@ -69,6 +69,23 @@ class SessionStats(ResettableStats):
         return d
 
 
+@dataclass
+class _StagedBatch:
+    """A padded batch whose host→device transfer is in flight."""
+    q: int                  # real (unpadded) query count
+    bucket: int             # padded power-of-two bucket
+    srcs: object            # staged arrays (device for single placement,
+    dsts: object            # host for distributed — engine.stage_queries)
+
+
+@dataclass
+class _InflightBatch:
+    """A dispatched phase-1 batch awaiting ``QuerySession.finish``."""
+    staged: _StagedBatch
+    handle: object          # engine.start_answer handle
+    t0: float
+
+
 class QuerySession:
     """Serve reachability queries against one index.
 
@@ -204,6 +221,57 @@ class QuerySession:
             out[ticket] = ans[lo: lo + s.size]
             lo += s.size
         return out
+
+    # ---------------------------------------------- staged (pipelined) path
+    def stage(self, srcs, dsts) -> "_StagedBatch":
+        """Start the host→device transfer of one padded batch (async).
+
+        The frontend's double-buffered slabs (DESIGN.md §7) hang on this
+        split: ``stage`` pads to the power-of-two bucket and kicks off
+        the H2D copy, ``begin`` dispatches phase 1 without blocking, and
+        ``finish`` blocks + runs phase 2 — so staging batch N+1 overlaps
+        the device classifying batch N. Batches are capped at one bucket
+        (``spec.max_batch``); the frontend's batch assembly guarantees
+        that.
+        """
+        srcs = np.asarray(srcs)
+        dsts = np.asarray(dsts)
+        if srcs.shape != dsts.shape or srcs.ndim != 1:
+            raise ValueError("srcs/dsts must be equal-length 1-D arrays")
+        q = srcs.size
+        if q > self.spec.max_batch:
+            raise ValueError(f"staged batch of {q} exceeds max_batch="
+                             f"{self.spec.max_batch}; chop it first")
+        b = self._bucket(max(q, 1))
+        if q < b:
+            ps = np.zeros(b, dtype=np.int64)
+            pt = np.zeros(b, dtype=np.int64)
+            ps[:q] = srcs
+            pt[:q] = dsts
+        else:
+            ps, pt = srcs, dsts
+        cs, ct = self.engine.stage_queries(ps, pt)
+        return _StagedBatch(q=q, bucket=b, srcs=cs, dsts=ct)
+
+    def begin(self, staged: "_StagedBatch") -> "_InflightBatch":
+        """Dispatch phase 1 on a staged batch without blocking."""
+        t0 = time.perf_counter()
+        handle = self.engine.start_answer(staged.srcs, staged.dsts)
+        return _InflightBatch(staged=staged, handle=handle, t0=t0)
+
+    def finish(self, inflight: "_InflightBatch") -> np.ndarray:
+        """Block on a ``begin`` handle: phase 2 over the UNKNOWN residue,
+        statistics, and the unpadded answers. Session counters (batches,
+        buckets, padding, seconds) account staged batches exactly like
+        ``query()`` ones; ``seconds`` covers begin→finish wall time."""
+        st = inflight.staged
+        ans = self.engine.finish_answer(inflight.handle)[: st.q]
+        self._seconds += time.perf_counter() - inflight.t0
+        self._n_positive += int(ans.sum())
+        self._n_padded += st.bucket - st.q
+        self._n_batches += 1
+        self._buckets[st.bucket] = self._buckets.get(st.bucket, 0) + 1
+        return ans
 
     # -------------------------------------------------------- live updates
     def bind_artifact(self, path, epoch: int = 0) -> None:

@@ -72,6 +72,10 @@ class IndexSpec:
     # -------------------------------------------- placement (DESIGN.md §3.6)
     placement: str = "single"       # single | replicated | sharded
     mesh: Optional[str] = None      # "DATAxMODEL", e.g. "2x4"; None = default
+    # ------------------------------------- async frontend (DESIGN.md §7)
+    deadline_us: int = 500          # per-tenant coalescing deadline
+    tenant_queue_cap: int = 8192    # pending queries per tenant queue
+    cache_entries: int = 65536      # epoch-keyed answer cache; 0 disables
 
     # ------------------------------------------------------------ validate
     def __post_init__(self):
@@ -140,6 +144,12 @@ class IndexSpec:
         if self.compact_mode not in COMPACT_MODES:
             raise ValueError(f"compact_mode must be one of {COMPACT_MODES}, "
                              f"got {self.compact_mode!r}")
+        if self.deadline_us < 1:
+            raise ValueError("deadline_us must be >= 1")
+        if self.tenant_queue_cap < 1:
+            raise ValueError("tenant_queue_cap must be >= 1")
+        if self.cache_entries < 0:
+            raise ValueError("cache_entries must be >= 0 (0 disables)")
         if self.placement not in PLACEMENTS:
             raise ValueError(f"placement must be one of {PLACEMENTS}, "
                              f"got {self.placement!r}")
@@ -259,6 +269,20 @@ class IndexSpec:
         ap.add_argument("--mesh", default=d.mesh, metavar="DATAxMODEL",
                         help="serving mesh shape, e.g. 2x4 (default: all "
                              "devices on one axis per --placement)")
+        ap.add_argument("--deadline-us", type=int, default=d.deadline_us,
+                        dest="deadline_us",
+                        help="frontend coalescing deadline per tenant: a "
+                             "queue drains when a batch bucket fills OR "
+                             "its oldest request ages past this "
+                             "(DESIGN.md §7)")
+        ap.add_argument("--tenant-queue-cap", type=int,
+                        default=d.tenant_queue_cap, dest="tenant_queue_cap",
+                        help="pending-query bound per tenant queue; "
+                             "admission rejects past it (backpressure)")
+        ap.add_argument("--cache", type=int, default=d.cache_entries,
+                        dest="cache_entries", metavar="ENTRIES",
+                        help="epoch-keyed (epoch, u, v) answer-cache "
+                             "capacity; 0 disables")
 
     @classmethod
     def from_args(cls, args: argparse.Namespace) -> "IndexSpec":
@@ -288,6 +312,9 @@ class IndexSpec:
             compact_mode=args.compact_mode,
             placement=args.placement,
             mesh=args.mesh,
+            deadline_us=args.deadline_us,
+            tenant_queue_cap=args.tenant_queue_cap,
+            cache_entries=args.cache_entries,
         )
 
     def to_cli_args(self) -> list:
@@ -323,6 +350,9 @@ class IndexSpec:
                  "--placement", self.placement]
         if self.mesh is not None:
             argv += ["--mesh", self.mesh]
+        argv += ["--deadline-us", str(self.deadline_us),
+                 "--tenant-queue-cap", str(self.tenant_queue_cap),
+                 "--cache", str(self.cache_entries)]
         return argv
 
 

@@ -1,0 +1,54 @@
+"""Regression: BENCH_query.json must measure the serving path.
+
+The serving bench (``run_bench_json``) once pinned ``phase2_mode="host"``
+— copied from ``run()``, where the host engine is the comparison subject.
+That silently routed the whole phase-2 residue through the per-query host
+DFS even on datasets that serve dense (n <= n_dense_max): go-like showed
+``phase2_host == phase2_queries == 347``. These tests pin the fix at both
+levels: the session under ``phase2_mode="auto"`` never touches the host
+fallback below the dense cutoff, and the bench JSON it emits records a
+zero host count with the dense/sparse split broken out.
+"""
+import sys
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.query_perf import run_bench_json  # noqa: E402
+from repro.core.query import brute_force_closure  # noqa: E402
+from repro.core.workload import random_queries  # noqa: E402
+from repro.graphs.generators import layered_dag  # noqa: E402
+from repro.reach import IndexSpec, QuerySession, build  # noqa: E402
+
+
+def test_auto_session_serves_dense_below_cutoff():
+    # weak index (k=1, no seeds) on a go-like-shaped layered DAG so a real
+    # UNKNOWN residue survives phase 1 and phase 2 actually runs
+    g = layered_dag(1_200, 16, 1.97, seed=2)
+    spec = IndexSpec(k=1, variant="L", phase2_mode="auto", use_seeds=False)
+    assert g.n <= spec.n_dense_max
+    sess = QuerySession(build(g, spec), spec)
+    qs, qt = random_queries(g, 4_000, seed=17)
+    got = sess.query(qs, qt)
+    tc = brute_force_closure(g)
+    assert np.array_equal(got, np.array([tc[s, t] for s, t in zip(qs, qt)]))
+    st = sess.stats
+    assert st.phase2_queries > 0, "workload must exercise phase 2"
+    assert st.phase2_host == 0, "dense-eligible graph fell back to host DFS"
+    assert st.phase2_dense == st.phase2_queries
+
+
+def test_bench_json_records_dense_phase2_no_host(tmp_path):
+    out = run_bench_json(str(tmp_path / "BENCH_query.json"),
+                         datasets=("go-like",), n_queries=1_000)
+    entry = out["datasets"]["go-like"]
+    assert entry["n_nodes"] <= IndexSpec().n_dense_max
+    for kind in ("random", "positive"):
+        mix = entry[kind]
+        assert mix["phase2_host"] == 0
+        assert mix["phase2_sparse"] == 0
+        assert mix["phase2_dense"] == mix["phase2_queries"]
+    # random workload on a weak-coverage layered DAG always leaves residue
+    assert entry["random"]["phase2_queries"] > 0

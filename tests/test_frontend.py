@@ -1,0 +1,319 @@
+"""reach.frontend: router admission/backpressure, deadline-aware
+coalescing (virtual clock), round-robin fairness, double-buffered slab
+parity, answer-cache LRU/short-circuit, multi-tenant correctness vs
+brute force — including across a mid-stream epoch bump."""
+import numpy as np
+import pytest
+
+from repro.core.query import brute_force_closure
+from repro.core.workload import random_queries
+from repro.graphs.generators import layered_dag, random_dag
+from repro.reach import Frontend, IndexSpec, QuerySession, Rejected, build
+from repro.reach.frontend import QueryRouter, Request
+
+
+class FakeClock:
+    """Injectable deterministic clock (seconds)."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _req(ticket, tenant, n, t=0.0, deadline=1.0):
+    srcs = np.zeros(n, dtype=np.int64)
+    dsts = np.zeros(n, dtype=np.int64)
+    return Request(ticket=ticket, tenant=tenant, srcs=srcs, dsts=dsts,
+                   t_submit=t, deadline=deadline,
+                   answers=np.zeros(n, dtype=bool),
+                   pending=np.arange(n, dtype=np.int64))
+
+
+# ------------------------------------------------------------------ router
+def test_router_rejects_too_large():
+    r = QueryRouter(queue_cap=100, deadline_s=1.0, max_request=16)
+    with pytest.raises(Rejected) as ei:
+        r.admit(_req(0, "a", 17))
+    assert ei.value.reason == "too_large" and ei.value.tenant == "a"
+    assert r.rejections["a"]["too_large"] == 1
+    assert r.pending_queries == 0          # nothing queued on rejection
+
+
+def test_router_rejects_queue_full_backpressure():
+    r = QueryRouter(queue_cap=10, deadline_s=1.0, max_request=64)
+    r.admit(_req(0, "a", 8))
+    with pytest.raises(Rejected) as ei:
+        r.admit(_req(1, "a", 4))           # 8 + 4 > cap 10
+    assert ei.value.reason == "queue_full"
+    assert r.rejections["a"]["queue_full"] == 1
+    assert r.pending_queries == 8          # first request untouched
+    r.admit(_req(2, "a", 2))               # exactly to the cap is fine
+    assert r.tenants["a"].hiwater == 10
+
+
+def test_router_per_tenant_overrides():
+    r = QueryRouter(queue_cap=100, deadline_s=1.0, max_request=1000)
+    r.register("vip", queue_cap=4, deadline_us=50.0)
+    tq = r.tenants["vip"]
+    assert tq.queue_cap == 4 and tq.deadline_s == pytest.approx(50e-6)
+    with pytest.raises(Rejected) as ei:
+        r.admit(_req(0, "vip", 5))
+    assert ei.value.reason == "too_large"  # bound is min(cap, max_request)
+
+
+def test_router_round_robin_is_fair_across_calls():
+    r = QueryRouter(queue_cap=100, deadline_s=1.0, max_request=100)
+    t = 0
+    for tenant in ("a", "b", "c"):
+        for _ in range(3):
+            r.admit(_req(t, tenant, 2))
+            t += 1
+    # each cut takes one request per tenant; the cursor persists, so a
+    # chatty tenant never gets two slots before everyone else got one
+    first = [q.tenant for q in r.take_batch(6)]
+    assert sorted(first) == ["a", "b", "c"]
+    second = [q.tenant for q in r.take_batch(6)]
+    assert sorted(second) == ["a", "b", "c"]
+    assert second[0] == first[0]           # rotation wrapped cleanly
+    assert [q.tenant for q in r.take_batch(100)] == first  # leftovers
+    assert r.pending_queries == 0
+
+
+def test_router_oversize_head_dispatches_alone():
+    # target below the head request's size must not livelock: the head
+    # goes out alone (admission already bounded it at max_request)
+    r = QueryRouter(queue_cap=100, deadline_s=1.0, max_request=100)
+    r.admit(_req(0, "a", 8))
+    r.admit(_req(1, "a", 2))
+    cut = r.take_batch(4)
+    assert [q.ticket for q in cut] == [0]
+    assert [q.ticket for q in r.take_batch(4)] == [1]
+
+
+# ---------------------------------------------------------------- frontend
+@pytest.fixture(scope="module")
+def small_sess():
+    g = layered_dag(400, 10, 2.0, seed=9)
+    spec = IndexSpec(k=1, variant="L", use_seeds=False, phase2_mode="auto",
+                     overlay_cap=64)
+    ix = build(g, spec)
+    tc = brute_force_closure(g)
+    return g, spec, ix, tc
+
+
+def _fresh(small_sess, **kw):
+    g, spec, ix, tc = small_sess
+    return g, tc, Frontend(QuerySession(ix, spec), **kw)
+
+
+def test_frontend_multi_tenant_matches_bruteforce(small_sess):
+    g, tc, fe = _fresh(small_sess, batch_target=64, cache_entries=0)
+    rng = np.random.default_rng(3)
+    want = {}
+    for i in range(30):
+        tenant = f"t{i % 3}"
+        n = int(rng.integers(1, 20))
+        qs, qt = random_queries(g, n, seed=100 + i)
+        want[fe.submit(tenant, qs, qt)] = np.array(
+            [tc[s, t] for s, t in zip(qs, qt)])
+        if i % 5 == 4:
+            fe.poll()
+    got = fe.drain()
+    assert set(got) == set(want)
+    for ticket, ans in got.items():
+        assert np.array_equal(ans, want[ticket]), f"ticket {ticket}"
+    st = fe.stats
+    assert sum(t.completed for t in st.tenants.values()) == 30
+    assert st.n_batches >= 1 and 0.0 < st.occupancy <= 1.0
+    assert st.batch_queries == sum(a.size for a in want.values())
+    assert sum(st.occupancy_hist.values()) == st.n_batches
+
+
+def test_frontend_query_parity_with_session(small_sess):
+    g, tc, fe = _fresh(small_sess, cache_entries=0)
+    qs, qt = random_queries(g, 300, seed=7)
+    got = fe.query("solo", qs, qt)
+    want = fe.session.query(qs, qt)        # plain (non-staged) path
+    assert np.array_equal(got, want)
+
+
+def test_deadline_flush_with_virtual_clock(small_sess):
+    clk = FakeClock()
+    g, tc, fe = _fresh(small_sess, batch_target=512, deadline_us=500.0,
+                       cache_entries=0, clock=clk)
+    qs, qt = random_queries(g, 8, seed=11)
+    fe.submit("a", qs, qt)                 # far below batch_target
+    assert fe.next_deadline() == pytest.approx(500e-6)
+    clk.advance(200e-6)
+    assert fe.poll() == 0                  # before the deadline: no cut
+    assert fe.stats.n_batches == 0 and not fe.results()
+    clk.advance(400e-6)                    # past the deadline now
+    fe.poll()                              # cuts + dispatches the slab
+    fe.poll()                              # finishes it
+    st = fe.stats
+    assert st.deadline_flushes == 1 and st.full_flushes == 0
+    assert st.n_batches == 1
+    assert len(fe.results()) == 1
+    assert fe.next_deadline() is None
+
+
+def test_full_flush_fires_before_deadline(small_sess):
+    clk = FakeClock()
+    g, tc, fe = _fresh(small_sess, batch_target=8, deadline_us=10_000_000.0,
+                       cache_entries=0, clock=clk)
+    for i in range(2):
+        qs, qt = random_queries(g, 4, seed=20 + i)
+        fe.submit("a", qs, qt)
+    fe.poll()                              # pool hit batch_target: cut now
+    fe.poll()
+    st = fe.stats
+    assert st.full_flushes == 1 and st.deadline_flushes == 0
+    assert len(fe.results()) == 2
+
+
+def test_deadline_miss_is_counted(small_sess):
+    clk = FakeClock()
+    g, tc, fe = _fresh(small_sess, batch_target=512, deadline_us=100.0,
+                       cache_entries=0, clock=clk)
+    qs, qt = random_queries(g, 4, seed=13)
+    fe.submit("late", qs, qt)
+    clk.advance(1.0)                       # way past the 100us deadline
+    fe.drain()
+    st = fe.stats.tenants["late"]
+    assert st.deadline_misses == 1
+    assert st.p99_us >= 1e6                # latency track saw the second
+
+
+def test_frontend_submit_backpressure(small_sess):
+    g, tc, fe = _fresh(small_sess, tenant_queue_cap=8, cache_entries=0)
+    qs, qt = random_queries(g, 6, seed=4)
+    t0 = fe.submit("a", qs, qt)
+    with pytest.raises(Rejected) as ei:
+        fe.submit("a", qs[:4], qt[:4])     # 6 + 4 > cap 8
+    assert ei.value.reason == "queue_full"
+    with pytest.raises(Rejected) as ei:
+        fe.submit("b", np.zeros(9, np.int64), np.zeros(9, np.int64))
+    assert ei.value.reason == "too_large"
+    got = fe.drain()                       # rejected work never dispatches
+    assert set(got) == {t0}
+    st = fe.stats
+    assert st.tenants["a"].rejected["queue_full"] == 1
+    assert st.tenants["b"].rejected["too_large"] == 1
+
+
+def test_cache_short_circuits_repeat_queries(small_sess):
+    g, tc, fe = _fresh(small_sess, cache_entries=1024)
+    qs, qt = random_queries(g, 64, seed=5)
+    first = fe.query("a", qs, qt)
+    n_dev = fe.session.engine.stats.n_queries
+    t = fe.submit("a", qs, qt)             # identical request: all hits
+    assert t in fe.results()               # completed at submit, no poll
+    again = fe.query("b", qs, qt)          # other tenants share the cache
+    assert np.array_equal(first, again)
+    assert fe.session.engine.stats.n_queries == n_dev  # device untouched
+    st = fe.stats
+    assert st.tenants["a"].cache_short_circuits == 1
+    assert st.tenants["b"].cache_short_circuits == 1
+    assert st.cache["hits"] >= 128 and st.cache["hit_rate"] > 0.0
+
+
+def test_cache_partial_hit_only_misses_dispatch(small_sess):
+    g, tc, fe = _fresh(small_sess, cache_entries=1024)
+    qs, qt = random_queries(g, 32, seed=6)
+    fe.query("a", qs, qt)
+    ext_s = np.concatenate([qs, qs[:8] ^ 1])   # 32 hits + 8 new pairs
+    ext_t = np.concatenate([qt, qt[:8]])
+    before = fe.stats.batch_queries
+    got = fe.query("a", ext_s, ext_t)
+    sent = fe.stats.batch_queries - before
+    # only the misses reach a slab (bucket padding is separate accounting)
+    assert sent <= 16
+    want = np.array([tc[s, t] for s, t in zip(ext_s, ext_t)])
+    assert np.array_equal(got, want)
+
+
+def test_cache_lru_evicts_at_capacity(small_sess):
+    g, tc, fe = _fresh(small_sess, cache_entries=16)
+    qs, qt = random_queries(g, 200, seed=8)
+    fe.query("a", qs, qt)
+    st = fe.stats.cache
+    assert st["entries"] <= 16
+    assert st["evictions"] > 0
+
+
+def test_cached_answer_never_served_across_update(small_sess):
+    g, spec, ix, tc = small_sess
+    # private index build: this test mutates the graph via the overlay
+    gg = random_dag(120, 1.2, seed=21)
+    sp = IndexSpec(k=1, variant="L", use_seeds=False, phase2_mode="auto",
+                   overlay_cap=32)
+    fe = Frontend(QuerySession(build(gg, sp), sp), cache_entries=256)
+    closure = brute_force_closure(gg)
+    neg = next((u, v) for u in range(gg.n) for v in range(gg.n)
+               if u != v and not closure[u, v])
+    u, v = neg
+    one = lambda x: np.array([x], dtype=np.int64)
+    assert not fe.query("a", one(u), one(v))[0]      # NEG, now cached
+    assert fe.stats.cache["entries"] >= 1
+    assert fe.apply_updates(one(u), one(v)) == 1     # flip NEG -> POS
+    assert fe.query("a", one(u), one(v))[0], \
+        "stale cached NEG served after apply_updates"
+    assert fe.stats.cache["invalidations"] == 1
+    fe.compact()                                     # epoch bump
+    assert fe.session.epoch == 1
+    assert fe.query("a", one(u), one(v))[0]
+    assert fe.stats.cache["invalidations"] == 2
+
+
+def test_frontend_correct_across_midstream_epoch_bump(small_sess):
+    """Open-loop stream with an apply_updates + compact landing between
+    submits: every answer matches brute force over the graph as of its
+    own dispatch (acceptance criterion: zero wrong answers)."""
+    gg = random_dag(150, 1.1, seed=33)
+    sp = IndexSpec(k=1, variant="L", use_seeds=False, phase2_mode="auto",
+                   overlay_cap=64)
+    fe = Frontend(QuerySession(build(gg, sp), sp), batch_target=32,
+                  cache_entries=512)
+    adj = {(int(a), int(b))
+           for a in range(gg.n) for b in gg.neighbors(a)}
+
+    def closure():
+        tc = np.zeros((gg.n, gg.n), dtype=bool)
+        for a, b in adj:
+            tc[a, b] = True
+        for k in range(gg.n):              # small n: Floyd–Warshall row-ops
+            tc[tc[:, k]] |= tc[k]
+        for d in range(gg.n):
+            tc[d, d] = True
+        return tc
+
+    rng = np.random.default_rng(0)
+    want, got = {}, {}
+    for step in range(12):
+        tc = closure()
+        for tenant in ("a", "b"):
+            qs, qt = random_queries(gg, 10, seed=1000 + 10 * step
+                                    + ord(tenant))
+            t = fe.submit(tenant, qs, qt)
+            want[t] = np.array([tc[s, d] for s, d in zip(qs, qt)])
+        got.update(fe.drain())             # answers under current graph
+        # mutate: a couple of random forward-ish edges
+        u = rng.integers(0, gg.n, size=2).astype(np.int64)
+        v = rng.integers(0, gg.n, size=2).astype(np.int64)
+        keep = u != v
+        fe.apply_updates(u[keep], v[keep])
+        adj.update((int(a), int(b)) for a, b in zip(u[keep], v[keep]))
+        if step == 6:
+            fe.compact()
+    assert fe.session.epoch >= 1
+    assert set(got) == set(want)
+    wrong = [t for t in want if not np.array_equal(got[t], want[t])]
+    assert not wrong, f"wrong answers for tickets {wrong}"
+    # every mutated step's first probe sees a new version token and clears
+    # (steps whose random edge pair degenerated to nothing may not bump)
+    assert fe.stats.cache["invalidations"] >= 8

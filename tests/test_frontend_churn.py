@@ -1,0 +1,69 @@
+"""Property: the frontend's answer cache is never stale under churn.
+
+For random DAGs, random insert streams, and random compaction points,
+every synchronous ``Frontend.query`` — cache enabled, small enough to
+exercise eviction — must match the brute-force closure of the *current*
+union graph. In particular a pair cached NEG before an insert that makes
+it reachable must come back POS afterwards: the ``(epoch, overlay
+version)`` token invalidates the cache wholesale on every mutation
+(DESIGN.md §7).
+
+Runs under real hypothesis when installed, else the deterministic
+``tests/_hyp`` shim.
+"""
+import numpy as np
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                                   # tier-1 bare env
+    from _hyp import given, settings, st
+
+from repro.core.query import brute_force_closure
+from repro.graphs.csr import build_csr
+from repro.graphs.generators import random_dag
+from repro.reach import Frontend, IndexSpec, QuerySession, build
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n=st.integers(40, 120),
+       compact_at=st.integers(0, 5),
+       cache_entries=st.sampled_from([16, 256]))
+def test_cache_exact_under_churn(seed, n, compact_at, cache_entries):
+    rng = np.random.default_rng(seed)
+    g = random_dag(n, 1.3, seed=seed)
+    spec = IndexSpec(k=1, variant="L", use_seeds=False, phase2_mode="auto",
+                     overlay_cap=128)
+    fe = Frontend(QuerySession(build(g, spec), spec), batch_target=64,
+                  cache_entries=cache_entries)
+    edges = [(int(a), int(b)) for a in range(n) for b in g.neighbors(a)]
+    for step in range(6):
+        tc = brute_force_closure(build_csr(
+            n, [a for a, _ in edges], [b for _, b in edges]))
+        # two query rounds per step so round 2 replays round 1's pairs
+        # straight out of the cache — then mutate and require the flip
+        qs = rng.integers(0, n, size=24).astype(np.int64)
+        qt = rng.integers(0, n, size=24).astype(np.int64)
+        for _ in range(2):
+            got = fe.query("t", qs, qt)
+            want = np.array([tc[s, d] for s, d in zip(qs, qt)])
+            assert np.array_equal(got, want), \
+                f"step {step}: answers diverged from live closure"
+        # force at least one cached-NEG -> POS flip when one exists
+        neg = np.flatnonzero(~want)
+        us, vs = [], []
+        if neg.size:
+            us.append(qs[neg[0]])
+            vs.append(qt[neg[0]])
+        us.extend(rng.integers(0, n, size=2))
+        vs.extend(rng.integers(0, n, size=2))
+        us, vs = np.asarray(us, np.int64), np.asarray(vs, np.int64)
+        keep = us != vs
+        fe.apply_updates(us[keep], vs[keep])
+        edges.extend(zip(us[keep].tolist(), vs[keep].tolist()))
+        if step == compact_at:
+            fe.compact()
+    st_ = fe.stats
+    assert st_.cache["invalidations"] >= 1
+    assert st_.tenants["t"].completed == st_.tenants["t"].requests
