@@ -182,6 +182,16 @@ def serve_reachability(n_nodes: int, avg_deg: float, n_queries: int,
     frontend_stats = None
     if n_tenants > 0:
         from ..reach import Frontend, Rejected
+        # a request larger than min(queue_cap, max_batch) is rejected
+        # "too_large" on EVERY submit — no amount of polling makes it
+        # admissible, so validate up front instead of spinning forever
+        admissible = min(spec.tenant_queue_cap, spec.max_batch)
+        if request_size > admissible:
+            raise ValueError(
+                f"--request-size {request_size} exceeds the admissible "
+                f"bound min(tenant_queue_cap={spec.tenant_queue_cap}, "
+                f"max_batch={spec.max_batch}) = {admissible}; shrink the "
+                "request or raise --tenant-queue-cap/--max-batch")
         fe = Frontend(sess)
         backpressure = 0
         t0 = time.perf_counter()
@@ -192,7 +202,9 @@ def serve_reachability(n_nodes: int, avg_deg: float, n_queries: int,
                 try:
                     fe.submit(tenant, s, d)
                     break
-                except Rejected:
+                except Rejected as e:
+                    if e.reason != "queue_full":
+                        raise      # permanent: polling can't fix it
                     # bounded queues: drain the loop instead of growing
                     backpressure += 1
                     fe.poll()

@@ -64,12 +64,18 @@ class AnswerCache:
             self.version = version
 
     # ----------------------------------------------------------------- API
-    def lookup(self, version, srcs: np.ndarray,
-               dsts: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    def lookup(self, version, srcs: np.ndarray, dsts: np.ndarray, *,
+               commit: bool = True) -> Tuple[np.ndarray, np.ndarray]:
         """Probe a batch under ``version``. Returns ``(answers, hit)``
         bool arrays; ``answers[i]`` is meaningful only where ``hit[i]``.
         A version bump clears the cache before probing (every probe then
-        misses — the post-bump answers repopulate it)."""
+        misses — the post-bump answers repopulate it).
+
+        ``commit=False`` peeks: the hit/miss counters and LRU recency are
+        left untouched (the version sync still runs — invalidation is
+        correctness, not accounting). The frontend peeks at ``submit()``
+        and calls :meth:`commit_probe` only once admission succeeds, so a
+        rejected request never skews hit_rate or recency."""
         self._sync(version)
         q = srcs.size
         ans = np.zeros(q, dtype=bool)
@@ -81,12 +87,31 @@ class AnswerCache:
             got = d.get(key)
             if got is None:
                 continue
-            d.move_to_end(key)
+            if commit:
+                d.move_to_end(key)
             ans[i] = got
             hit[i] = True
-        self.hits += int(hit.sum())
-        self.misses += q - int(hit.sum())
+        if commit:
+            self.hits += int(hit.sum())
+            self.misses += q - int(hit.sum())
         return ans, hit
+
+    def commit_probe(self, srcs: np.ndarray, dsts: np.ndarray,
+                     hit: np.ndarray) -> None:
+        """Account a prior ``lookup(commit=False)`` peek: bump the
+        hit/miss counters and refresh LRU recency of the hit keys. Call
+        once the probed request is actually being served (admitted or
+        short-circuited); keys evicted since the peek just lose their
+        recency touch."""
+        d = self._d
+        n = self.n
+        for i in np.flatnonzero(hit):
+            key = int(srcs[i]) * n + int(dsts[i])
+            if key in d:
+                d.move_to_end(key)
+        n_hit = int(hit.sum())
+        self.hits += n_hit
+        self.misses += hit.size - n_hit
 
     def insert(self, version, srcs: np.ndarray, dsts: np.ndarray,
                answers: np.ndarray) -> None:

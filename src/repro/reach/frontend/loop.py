@@ -155,8 +155,13 @@ class Frontend:
         ticket = self._next_ticket
         n = srcs.size
         answers = np.zeros(n, dtype=bool)
+        hit = None
         if self.cache is not None and n:
-            c_ans, hit = self.cache.lookup(self._graph_version(), srcs, dsts)
+            # peek, don't count: a request the router then rejects must
+            # leave no trace in hit_rate or LRU recency — the probe is
+            # committed only once the request is accepted (or completes)
+            c_ans, hit = self.cache.lookup(self._graph_version(), srcs,
+                                           dsts, commit=False)
             answers[hit] = c_ans[hit]
             pending = np.flatnonzero(~hit)
         else:
@@ -164,6 +169,8 @@ class Frontend:
         if pending.size == 0:
             # every pair answered from the cache (or an empty request):
             # complete without touching a queue or the device
+            if hit is not None:
+                self.cache.commit_probe(srcs, dsts, hit)
             self._next_ticket += 1
             acc["requests"] += 1
             acc["queries"] += n
@@ -176,6 +183,8 @@ class Frontend:
                       t_submit=now, deadline=now + tq.deadline_s,
                       answers=answers, pending=pending)
         self.router.admit(req)              # raises Rejected on backpressure
+        if hit is not None:
+            self.cache.commit_probe(srcs, dsts, hit)
         self._next_ticket += 1
         acc["requests"] += 1
         acc["queries"] += n
@@ -225,7 +234,13 @@ class Frontend:
         if self._staged is not None:
             cut = self._staged
             self._staged = None
-            self._inflight = (cut, self.session.begin(cut.staged), now)
+            # re-read the clock at dispatch: _finish() above may have
+            # blocked on the previous slab, and the service EWMA must
+            # measure THIS slab's begin->finish time, not the prior
+            # slab's phase 2 plus the inter-poll gap (an inflated EWMA
+            # over-leads the deadline flush, shrinking batches)
+            self._inflight = (cut, self.session.begin(cut.staged),
+                              self.clock())
         return done
 
     @property
@@ -307,15 +322,36 @@ class Frontend:
         return len(cut.reqs)
 
     # ---------------------------------------------------------- live graph
+    def _quiesce(self) -> None:
+        """Finish any staged/in-flight slab before a graph mutation.
+
+        A slab is bound to the engine that staged it: ``compact()`` swaps
+        the engine AND the condensation, so finishing an old handle
+        against the new engine would misread condensed ids and treat
+        old-epoch phase-1 base-NEG verdicts as final (the new engine has
+        no overlay) — silently wrong answers, not merely stale ones. The
+        double buffer must therefore run dry before the swap; queued
+        requests that have not been cut into a slab yet are fine — they
+        dispatch later, against the post-mutation engine."""
+        while self.busy:
+            self.poll()
+
     def apply_updates(self, srcs, dsts) -> int:
-        """Insert edges through the session. The graph version token
-        changes with the overlay (and with any auto-compaction), so the
-        answer cache invalidates wholesale on the next probe — a cached
-        answer is never served across a mutation (DESIGN.md §7)."""
+        """Insert edges through the session. Quiesces the double buffer
+        first: an overlay-full batch can auto-compact, which swaps the
+        engine under any in-flight slab (see :meth:`_quiesce`). The graph
+        version token changes with the overlay (and with any
+        auto-compaction), so the answer cache invalidates wholesale on
+        the next probe — a cached answer is never served across a
+        mutation (DESIGN.md §7)."""
+        self._quiesce()
         return self.session.apply_updates(srcs, dsts)
 
     def compact(self, mode: Optional[str] = None):
-        """Fold the overlay (epoch bump → wholesale cache invalidation)."""
+        """Fold the overlay (epoch bump → wholesale cache invalidation).
+        Quiesces the double buffer first — in-flight slabs finish on the
+        engine that dispatched them (see :meth:`_quiesce`)."""
+        self._quiesce()
         return self.session.compact(mode)
 
     # -------------------------------------------------------------- stats

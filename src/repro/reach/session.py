@@ -103,6 +103,7 @@ class QuerySession:
                                         ell=ell))
         self._pending: List[Tuple[int, np.ndarray, np.ndarray]] = []
         self._next_ticket = 0
+        self._n_inflight = 0          # begin() handles not yet finish()ed
         self.artifact_manifest: Optional[dict] = None   # set by load()
         self.epoch = 0                # graph epoch: bumped by compact()
         self._artifact_dir = None     # set by load(); enables delta logging
@@ -254,9 +255,12 @@ class QuerySession:
         return _StagedBatch(q=q, bucket=b, srcs=cs, dsts=ct)
 
     def begin(self, staged: "_StagedBatch") -> "_InflightBatch":
-        """Dispatch phase 1 on a staged batch without blocking."""
+        """Dispatch phase 1 on a staged batch without blocking. The
+        handle is bound to the CURRENT engine: ``compact()`` refuses to
+        run while any handle is outstanding (see there)."""
         t0 = time.perf_counter()
         handle = self.engine.start_answer(staged.srcs, staged.dsts)
+        self._n_inflight += 1
         return _InflightBatch(staged=staged, handle=handle, t0=t0)
 
     def finish(self, inflight: "_InflightBatch") -> np.ndarray:
@@ -265,7 +269,10 @@ class QuerySession:
         buckets, padding, seconds) account staged batches exactly like
         ``query()`` ones; ``seconds`` covers begin→finish wall time."""
         st = inflight.staged
-        ans = self.engine.finish_answer(inflight.handle)[: st.q]
+        try:
+            ans = self.engine.finish_answer(inflight.handle)[: st.q]
+        finally:
+            self._n_inflight -= 1
         self._seconds += time.perf_counter() - inflight.t0
         self._n_positive += int(ans.sum())
         self._n_padded += st.bucket - st.q
@@ -399,6 +406,17 @@ class QuerySession:
         artifact + delta log always reconstruct the live graph. Returns
         the new index's BuildStats.
         """
+        if self._n_inflight:
+            # a begin() handle holds phase-1 verdicts computed against
+            # the CURRENT engine/condensation; swapping the engine under
+            # it would misread condensed ids against the rebuilt index
+            # and drop overlay verdicts — wrong answers, silently.
+            # Frontend._quiesce drains before mutating; anyone driving
+            # stage/begin/finish directly must do the same.
+            raise RuntimeError(
+                f"compact() with {self._n_inflight} staged phase-1 "
+                "handle(s) outstanding — finish() them first (the "
+                "frontend quiesces its double buffer before mutating)")
         from .dynamic import compact_index
         ov = self.engine.overlay
         esrc, edst = (ov.edges() if ov is not None

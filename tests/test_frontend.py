@@ -7,6 +7,7 @@ import pytest
 
 from repro.core.query import brute_force_closure
 from repro.core.workload import random_queries
+from repro.graphs.csr import build_csr
 from repro.graphs.generators import layered_dag, random_dag
 from repro.reach import Frontend, IndexSpec, QuerySession, Rejected, build
 from repro.reach.frontend import QueryRouter, Request
@@ -268,6 +269,82 @@ def test_cached_answer_never_served_across_update(small_sess):
     assert fe.session.epoch == 1
     assert fe.query("a", one(u), one(v))[0]
     assert fe.stats.cache["invalidations"] == 2
+
+
+def test_mutation_while_slab_in_flight_quiesces():
+    """Regression: apply_updates()/compact() while a slab was staged or
+    in flight used to swap the engine under the dispatched handle —
+    old-condensation ids misread against the rebuilt index, silently
+    wrong answers. The frontend must run the double buffer dry first;
+    the in-flight slab's answers reflect the graph it was dispatched
+    under."""
+    gg = random_dag(150, 1.2, seed=55)
+    sp = IndexSpec(k=1, variant="L", use_seeds=False, phase2_mode="auto",
+                   overlay_cap=64)
+    fe = Frontend(QuerySession(build(gg, sp), sp), batch_target=8,
+                  cache_entries=256)
+    tc = brute_force_closure(gg)
+    one = lambda x: np.array([x], dtype=np.int64)
+    qs, qt = random_queries(gg, 8, seed=2)
+    t1 = fe.submit("a", qs, qt)
+    fe.poll()                          # full flush: slab now in flight
+    assert fe.busy
+    u, v = next((a, b) for a in range(gg.n) for b in range(gg.n)
+                if a != b and not tc[a, b])
+    assert fe.apply_updates(one(u), one(v)) == 1   # quiesces first
+    assert not fe.busy                 # buffer ran dry before the insert
+    got1 = fe.results()[t1]            # answered under the PRE-insert graph
+    assert np.array_equal(got1, np.array([tc[s, d]
+                                          for s, d in zip(qs, qt)]))
+    # same contract across a compact() (engine + condensation swap)
+    qs2, qt2 = random_queries(gg, 8, seed=3)
+    t2 = fe.submit("a", qs2, qt2)
+    fe.poll()
+    assert fe.busy
+    fe.compact()                       # quiesces, then swaps the engine
+    assert fe.session.epoch == 1 and not fe.busy
+    edges = ([(int(a), int(b)) for a in range(gg.n)
+              for b in gg.neighbors(a)] + [(u, v)])
+    tc2 = brute_force_closure(build_csr(
+        gg.n, [a for a, _ in edges], [b for _, b in edges]))
+    got2 = fe.results()[t2]            # dispatched AFTER the insert
+    assert np.array_equal(got2, np.array([tc2[s, d]
+                                          for s, d in zip(qs2, qt2)]))
+    assert fe.query("a", one(u), one(v))[0]   # flip visible post-epoch
+
+
+def test_session_compact_refuses_under_inflight_handle(small_sess):
+    """Defense in depth below the frontend: a begin() handle pins the
+    engine it was dispatched on, so compact() must refuse rather than
+    swap the index under it."""
+    g, spec, ix, tc = small_sess
+    sess = QuerySession(ix, spec)
+    qs, qt = random_queries(g, 4, seed=17)
+    inflight = sess.begin(sess.stage(qs, qt))
+    with pytest.raises(RuntimeError, match="outstanding"):
+        sess.compact()
+    ans = sess.finish(inflight)        # handle still finishes cleanly
+    assert np.array_equal(ans, np.array([tc[s, t]
+                                         for s, t in zip(qs, qt)]))
+    assert sess.epoch == 0             # refused compact mutated nothing
+
+
+def test_rejected_submit_leaves_cache_stats_untouched(small_sess):
+    """A request the router rejects must leave no trace in the cache:
+    no hit/miss counts, no LRU recency refresh."""
+    g, tc, fe = _fresh(small_sess, tenant_queue_cap=8, cache_entries=1024)
+    qs, qt = random_queries(g, 6, seed=23)
+    fe.query("a", qs, qt)              # populate the cache (and drain)
+    fs, ft = random_queries(g, 6, seed=24)
+    fe.submit("a", fs, ft)             # fill the queue to 6, unpolled
+    before = dict(fe.stats.cache)
+    with pytest.raises(Rejected):      # 3 misses + fill 6 > cap 8
+        fe.submit("a", np.concatenate([qs, qs[:3] ^ 1]),
+                  np.concatenate([qt, qt[:3]]))
+    after = fe.stats.cache
+    assert after["hits"] == before["hits"]
+    assert after["misses"] == before["misses"]
+    assert after["hit_rate"] == before["hit_rate"]
 
 
 def test_frontend_correct_across_midstream_epoch_bump(small_sess):
