@@ -77,11 +77,17 @@ def hub_stress_graph(n: int = HUB_STRESS_N, hub_deg: int = HUB_STRESS_DEG):
                      np.concatenate([dst, tgt]))
 
 
-def _build_pair(g, k: int):
-    """Host sweep + wavefront device build of the same graph, measured."""
+def _build_pair(g, k: int, kernel_impl: str = "auto"):
+    """Host sweep + wavefront device build of the same graph, measured.
+
+    ``device_over_host_ratio`` = device seconds / host seconds — the
+    headline build-cost multiple of the device pipeline over the host
+    sweep (LOWER is better; on CPU the device pipeline pays XLA dispatch
+    per wave, on TPU it wins outright). ``kernel_impl`` selects the
+    merge-cover core for the device column (DESIGN.md §3.7)."""
     from repro import reach
     dev_spec = reach.IndexSpec(k=k, variant="G", cover_method="topgap",
-                               builder="wavefront")
+                               builder="wavefront", kernel_impl=kernel_impl)
     host_spec = reach.IndexSpec(k=k, variant="G", cover_method="topgap",
                                 builder="host")
     with Timer() as t:
@@ -92,8 +98,10 @@ def _build_pair(g, k: int):
     st = dx.stats
     return {
         "n": int(g.n), "m": int(g.m), "k": k,
+        "kernel_impl": kernel_impl,
         "host_build_seconds": host_s,
         "device_build_seconds": t.seconds,
+        "device_over_host_ratio": t.seconds / host_s,
         "host_fallbacks": int(st.host_fallbacks),
         "peak_slab_bytes": int(st.peak_slab_bytes),
         "hub_nodes": int(st.hub_nodes),
@@ -105,19 +113,26 @@ def _build_pair(g, k: int):
 
 def run_bench_json(json_path: str, datasets=None, k: int = 2,
                    hub_n: int = HUB_STRESS_N,
-                   hub_deg: int = HUB_STRESS_DEG) -> dict:
+                   hub_deg: int = HUB_STRESS_DEG,
+                   kernel_impl: str = "auto") -> dict:
     from repro.core.build import prior_peak_slab_bytes
     datasets = datasets or ("go-like", "human-like")
-    out = {"k": k, "datasets": {}, "hub_stress": {}}
+    out = {"k": k, "kernel_impl": kernel_impl, "datasets": {},
+           "hub_stress": {}}
     for name in datasets:
-        row, _ = _build_pair(get_graph(name), k)
+        row, _ = _build_pair(get_graph(name), k, kernel_impl)
         out["datasets"][name] = row
         emit(f"build/{name}/device", row["device_build_seconds"] * 1e6,
              f"fallbacks={row['host_fallbacks']};"
              f"peak_slab={row['peak_slab_bytes']}")
+        emit(f"build/{name}/device_over_host_ratio",
+             row["device_over_host_ratio"],
+             f"host={row['host_build_seconds']:.3f}s;"
+             f"device={row['device_build_seconds']:.3f}s;"
+             f"kernel_impl={kernel_impl}")
 
     g = hub_stress_graph(hub_n, hub_deg)
-    row, dx = _build_pair(g, k)
+    row, dx = _build_pair(g, k, kernel_impl)
     # the yardsticks this pipeline replaced (core.build.pipeline): "wave"
     # replays the immediate pre-refactor rule (each wave padded to its own
     # max degree, no fit/hub split), "global" the monolithic builder's
@@ -134,6 +149,11 @@ def run_bench_json(json_path: str, datasets=None, k: int = 2,
     emit("build/hub-stress/device", row["device_build_seconds"] * 1e6,
          f"peak_slab={row['peak_slab_bytes']};"
          f"prior_alloc={row['prior_alloc_bytes']}")
+    emit("build/hub-stress/device_over_host_ratio",
+         row["device_over_host_ratio"],
+         f"host={row['host_build_seconds']:.3f}s;"
+         f"device={row['device_build_seconds']:.3f}s;"
+         f"kernel_impl={kernel_impl}")
 
     with open(json_path, "w") as f:
         json.dump(out, f, indent=1, sort_keys=True)
@@ -150,12 +170,16 @@ def main():
     ap.add_argument("--k", type=int, default=2)
     ap.add_argument("--hub-n", type=int, default=HUB_STRESS_N)
     ap.add_argument("--hub-deg", type=int, default=HUB_STRESS_DEG)
+    ap.add_argument("--kernel-impl", default="auto",
+                    choices=("xla", "pallas", "auto"), dest="kernel_impl",
+                    help="merge-cover core for the device build column")
     args, _ = ap.parse_known_args()
     datasets = (tuple(args.datasets.split(","))
                 if args.datasets else None)
     if args.json:
         run_bench_json(args.json, datasets, k=args.k,
-                       hub_n=args.hub_n, hub_deg=args.hub_deg)
+                       hub_n=args.hub_n, hub_deg=args.hub_deg,
+                       kernel_impl=args.kernel_impl)
     else:
         run(datasets, k=args.k)
 

@@ -1,0 +1,200 @@
+"""Microbenchmark of the two fused Pallas kernels against their XLA
+reference paths, with a bytes-moved roofline model (DESIGN.md §3).
+
+Two kernels, matching the serving hot loops:
+
+  * merge_cover    — kernels/merge_cover.py (single fused merge + topgap
+    re-cover pass) vs the ``lax.scan`` rows of core/build/merge_kernels.py.
+    Model traffic: the three [B, m] interval planes in, the [B, w_out]
+    covered planes + counts out, once each.
+  * frontier_step  — kernels/frontier_fused.py (fused probe + classify
+    BFS step) vs kernels/frontier.py. Model traffic per step: five int32
+    streams per raw candidate (ELL entry, probe's visited word + answered
+    flag, key write, compaction) plus the compacted frontier write and the
+    per-query pos/visited bases, times the measured BFS depth bound.
+
+Writes (or merges into) the ``kernels`` section of BENCH_query.json:
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench --json BENCH_query.json
+
+On CPU the Pallas side runs in interpreter mode — functional parity, not
+TPU performance; ``roofline_frac`` is achieved bytes/s over the TPU v5e
+HBM bandwidth and only means something for on-device runs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from .common import emit
+from .roofline import HBM_BW
+
+
+def _time(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds of a jitted call, post-warmup, synchronized."""
+    for _ in range(warmup):
+        out = fn(*args)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        tree = out if isinstance(out, tuple) else (out,)
+        for leaf in tree:
+            leaf.block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _sorted_rows(rng, B, m, density=0.5, max_len=6, spread=200):
+    from repro.kernels.merge_cover import INVALID
+    cb = np.full((B, m), INVALID, np.int32)
+    ce = np.full((B, m), -1, np.int32)
+    cx = np.zeros((B, m), np.int32)
+    for i in range(B):
+        n_iv = rng.binomial(m, density)
+        if n_iv == 0:
+            continue
+        starts = np.sort(rng.integers(0, spread, size=n_iv))
+        cb[i, :n_iv] = starts
+        ce[i, :n_iv] = starts + rng.integers(0, max_len, size=n_iv)
+        cx[i, :n_iv] = rng.integers(0, 2, size=n_iv)
+    return cb, ce, cx
+
+
+def bench_merge_cover(B: int = 512, m: int = 33, k: int = 4,
+                      w_out: int = 4, seed: int = 0) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from functools import partial
+
+    from repro.core.build.merge_kernels import (_merge_sorted_row,
+                                                _topgap_cover_row)
+    from repro.kernels.merge_cover import merge_cover_sorted_rows
+
+    rng = np.random.default_rng(seed)
+    cb, ce, cx = _sorted_rows(rng, B, m)
+    args = (jnp.asarray(cb), jnp.asarray(ce), jnp.asarray(cx))
+
+    @jax.jit
+    def xla_rows(b, e, x):
+        def row(rb, re_, rx):
+            ob, oe, ox, cnt = _merge_sorted_row(rb, re_, rx)
+            return _topgap_cover_row(ob, oe, ox, cnt, k, w_out)
+        return jax.vmap(row)(b, e, x)
+
+    interp = jax.default_backend() != "tpu"
+    pallas_rows = partial(merge_cover_sorted_rows, k=k, w_out=w_out,
+                          interpret=interp)
+    # parity before timing: the bench must not race ahead of the suites
+    rx, rp = xla_rows(*args), pallas_rows(*args)
+    for a, b in zip(rx, rp):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # three [B, m] planes in; covered planes + counts out (int32 words)
+    model_bytes = 4 * B * (3 * m + 3 * w_out + 1)
+    rec = {"B": B, "m": m, "k": k, "w_out": w_out,
+           "model_bytes": model_bytes}
+    for name, fn in (("xla", xla_rows), ("pallas", pallas_rows)):
+        s = _time(fn, *args)
+        rec[name] = {"seconds": s,
+                     "achieved_bytes_per_s": model_bytes / s,
+                     "roofline_frac": model_bytes / s / HBM_BW}
+        emit(f"kernel/merge_cover/{name}", s * 1e6,
+             f"B={B};m={m};roofline_frac={rec[name]['roofline_frac']:.2e}")
+    return rec
+
+
+def bench_frontier_step(n: int = 10_000, q: int = 256, cap: int = 4096,
+                        depth_bound: int = 20, seed: int = 7) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.ferrari import build_index
+    from repro.core.packed import pack_index
+    from repro.core.workload import random_queries
+    from repro.graphs.generators import scale_free_digraph
+    from repro.kernels.frontier import expand_frontier
+    from repro.kernels.frontier_fused import expand_frontier_fused
+
+    g = scale_free_digraph(n, 3.0, seed=seed)
+    # 32 seeds = single-word seed sets: the gather-fused slab/meta layout
+    # (PackedIndex.fused_layout) the fused kernel requires
+    ix = build_index(g, k=1, variant="L", n_seeds=32)
+    p = pack_index(ix)
+    dev = p.to_device(None, fused=True)
+    ell, tsrc, tdst = p.ell_layout(width=None)
+    is_hub = np.zeros(p.n, bool)
+    is_hub[tsrc] = True
+    qs, qt = random_queries(g, q, seed=1)
+    cs, ct = jnp.asarray(p.comp[qs]), jnp.asarray(p.comp[qt])
+    pad = jnp.zeros((q,), bool)
+    layout = (jnp.asarray(ell), jnp.asarray(tsrc), jnp.asarray(tdst),
+              jnp.asarray(is_hub))
+    w = ell.shape[1]
+    interp = jax.default_backend() != "tpu"
+
+    def xla_step(cs_, ct_, pad_):
+        return expand_frontier(dev, *layout, cs_, ct_, pad_,
+                               max_steps=depth_bound, cap=cap)
+
+    def pallas_step(cs_, ct_, pad_):
+        return expand_frontier_fused(dev, *layout, cs_, ct_, pad_,
+                                     max_steps=depth_bound, cap=cap,
+                                     interpret=interp)
+
+    (pa, ova), (pb, ovb) = xla_step(cs, ct, pad), pallas_step(cs, ct, pad)
+    if not bool(ova) and not bool(ovb):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+
+    # per step: 5 int32 streams per raw candidate (ELL entry, visited word,
+    # answered flag, key write, compaction) + compacted frontier + per-query
+    # pos/visited bases; times the BFS depth bound
+    model_bytes = 4 * (5 * cap * w + cap + 2 * q) * depth_bound
+    rec = {"n": n, "q": q, "cap": cap, "ell_width": int(w),
+           "bfs_depth_bound": depth_bound, "model_bytes": model_bytes}
+    for name, fn in (("xla", xla_step), ("pallas", pallas_step)):
+        s = _time(fn, cs, ct, pad)
+        rec[name] = {"seconds": s, "queries_per_s": q / s,
+                     "achieved_bytes_per_s": model_bytes / s,
+                     "roofline_frac": model_bytes / s / HBM_BW}
+        emit(f"kernel/frontier_step/{name}", s * 1e6,
+             f"n={n};q={q};roofline_frac={rec[name]['roofline_frac']:.2e}")
+    return rec
+
+
+def kernel_section(quick: bool = False) -> dict:
+    """The BENCH_query.json ``kernels`` section."""
+    if quick:
+        return {"hbm_bw": HBM_BW,
+                "merge_cover": bench_merge_cover(B=128, m=17),
+                "frontier_step": bench_frontier_step(n=2000, q=128,
+                                                     cap=2048)}
+    return {"hbm_bw": HBM_BW,
+            "merge_cover": bench_merge_cover(),
+            "frontier_step": bench_frontier_step()}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_query.json", metavar="PATH",
+                    help="merge the kernels section into this JSON")
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes (CI smoke)")
+    args = ap.parse_args()
+    sec = kernel_section(quick=args.quick)
+    out = {}
+    if os.path.exists(args.json):
+        with open(args.json) as f:
+            out = json.load(f)
+    out["kernels"] = sec
+    with open(args.json, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"# wrote kernels section -> {args.json}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

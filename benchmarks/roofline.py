@@ -29,6 +29,7 @@ HBM_BW = 819e9             # B/s per chip
 ICI_BW = 50e9              # B/s per link
 
 ART_DIR = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+BENCH_QUERY = Path(__file__).resolve().parents[1] / "BENCH_query.json"
 
 
 def load_cells(mesh: str = "single"):
@@ -88,6 +89,54 @@ def roofline_terms(rec: dict) -> dict:
     }
 
 
+def kernel_rows(bench_path: Path = None):
+    """Fused-kernel rows: achieved vs modeled bytes per invocation for the
+    two serving hot-loop kernels (kernels/merge_cover.py and
+    kernels/frontier_fused.py), read from the ``kernels`` section that
+    `benchmarks.kernel_bench` writes into BENCH_query.json. ``modeled``
+    is the bytes-moved lower bound of the kernel's traffic model;
+    ``roofline_frac`` is achieved bytes/s over HBM_BW — meaningful for
+    on-device runs (CPU interpreter numbers are functional only)."""
+    path = bench_path or BENCH_QUERY
+    if not path.exists():
+        return []
+    sec = json.loads(path.read_text()).get("kernels") or {}
+    rows = []
+    for kname in ("merge_cover", "frontier_step"):
+        rec = sec.get(kname)
+        if not rec:
+            continue
+        for impl in ("xla", "pallas"):
+            r = rec.get(impl)
+            if not r:
+                continue
+            shape = (f"B{rec['B']}xm{rec['m']}" if kname == "merge_cover"
+                     else f"n{rec['n']}xq{rec['q']}")
+            rows.append({
+                "kernel": kname, "impl": impl, "shape": shape,
+                "modeled_bytes": rec["model_bytes"],
+                "seconds": r["seconds"],
+                "achieved_bytes_per_s": r["achieved_bytes_per_s"],
+                "roofline_frac": r["roofline_frac"],
+            })
+    return rows
+
+
+def kernel_table(bench_path: Path = None) -> str:
+    rows = kernel_rows(bench_path)
+    if not rows:
+        return ""
+    lines = ["", "| kernel | impl | shape | modeled B | seconds "
+             "| achieved B/s | roofline |", "|" + "---|" * 7]
+    for r in rows:
+        lines.append(
+            f"| {r['kernel']} | {r['impl']} | {r['shape']} "
+            f"| {r['modeled_bytes']} | {r['seconds']:.3e} "
+            f"| {r['achieved_bytes_per_s']:.3e} "
+            f"| {r['roofline_frac']:.2e} |")
+    return "\n".join(lines)
+
+
 def table(mesh: str = "single", fmt: str = "md"):
     rows = [roofline_terms(r) for r in load_cells(mesh) if r.get("ok")]
     rows.sort(key=lambda r: (r["arch"], r["shape"]))
@@ -124,9 +173,18 @@ def run():
              r["step_time_s"] * 1e6,
              f"dom={r['dominant']};roofline_frac={r['roofline_frac']};"
              f"useful={r['useful_frac']}")
+    for r in kernel_rows():
+        emit(f"roofline/kernel/{r['kernel']}/{r['impl']}",
+             r["seconds"] * 1e6,
+             f"modeled={r['modeled_bytes']};"
+             f"achieved={r['achieved_bytes_per_s']:.3e};"
+             f"roofline_frac={r['roofline_frac']:.2e}")
     return True
 
 
 if __name__ == "__main__":
     mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
     print(table(mesh))
+    kt = kernel_table()
+    if kt:
+        print(kt)

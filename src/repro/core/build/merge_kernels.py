@@ -119,9 +119,9 @@ def _topgap_cover_row(ob, oe, ox, cnt, k: int, w_out: int):
     return nb.astype(jnp.int32), ne.astype(jnp.int32), nx, jnp.minimum(cnt, k)
 
 
-@partial(jax.jit, static_argnames=("k", "w_out", "m"))
+@partial(jax.jit, static_argnames=("k", "w_out", "m", "impl"))
 def merge_cover_rows(begins, ends, exact, group_idx, extra_b, extra_e,
-                     k: int, w_out: int, m: int):
+                     k: int, w_out: int, m: int, impl: str = "xla"):
     """One batched merge+cover pass over row groups.
 
     ``begins/ends/exact [T, W]``: the source table (last row must be a
@@ -133,6 +133,12 @@ def merge_cover_rows(begins, ends, exact, group_idx, extra_b, extra_e,
     therefore visits equal-begin intervals in the same order as the host
     ``merge_many([tree] + children)`` concat, keeping single-shot merges
     bit-identical to the host sweep.
+
+    ``impl`` selects the merge+cover core: "xla" runs the lax.scan
+    reference below; "pallas" runs the fused VMEM-resident kernel
+    (`kernels.merge_cover`, interpreter mode off-TPU) — bit-identical by
+    the parity suite, selected via ``IndexSpec.kernel_impl``. The gather /
+    concat / sort prologue is shared.
 
     Returns per-group slabs ``[B, w_out]`` covered to ≤ k intervals.
     """
@@ -155,6 +161,12 @@ def merge_cover_rows(begins, ends, exact, group_idx, extra_b, extra_e,
     cb = jnp.take_along_axis(cb, order, 1)
     ce = jnp.take_along_axis(ce, order, 1)
     cx = jnp.take_along_axis(cx, order, 1)
+
+    if impl == "pallas":
+        from repro.kernels.merge_cover import merge_cover_sorted_rows
+        return merge_cover_sorted_rows(
+            cb, ce, cx, k=k, w_out=w_out,
+            interpret=jax.default_backend() != "tpu")
 
     def row(b, e, x):
         ob, oe, ox, cnt = _merge_sorted_row(b, e, x)

@@ -120,8 +120,13 @@ def build_wavefront(dag: CSR, tl: Optional[TreeLabels] = None, k: int = 2,
                     c: int = 4, variant: str = "L",
                     budget: Optional[int] = None,
                     merge_chunk: int = DEFAULT_MERGE_CHUNK,
-                    m_cap: Optional[int] = None) -> WavefrontIndex:
-    """Device wavefront construction over blevel waves (sinks first)."""
+                    m_cap: Optional[int] = None,
+                    kernel_impl: str = "xla") -> WavefrontIndex:
+    """Device wavefront construction over blevel waves (sinks first).
+
+    ``kernel_impl`` is the RESOLVED merge+cover core ("xla" or "pallas" —
+    "auto" is resolved by the callers via `kernels.ops.resolve_kernel_impl`).
+    """
     t0 = time.perf_counter()
     n = dag.n
     if tl is None:
@@ -148,7 +153,8 @@ def build_wavefront(dag: CSR, tl: Optional[TreeLabels] = None, k: int = 2,
             continue
         begins, ends, exact = _merge_wave(
             begins, ends, exact, counts, nodes, deg[nodes], m_cap, chunk,
-            indptr, indices, tree_b_all, tree_e_all, w_out, stats)
+            indptr, indices, tree_b_all, tree_e_all, w_out, stats,
+            kernel_impl)
 
     ix = WavefrontIndex(begins=np.array(begins), ends=np.array(ends),
                         exact=np.array(exact), counts=counts, tl=tl, k=k,
@@ -166,7 +172,7 @@ def build_wavefront(dag: CSR, tl: Optional[TreeLabels] = None, k: int = 2,
 
 def _merge_wave(begins, ends, exact, counts, nodes, deg_lv, m_cap: int,
                 chunk: int, indptr, indices, tree_b_all, tree_e_all,
-                w_out: int, stats: MergeStats):
+                w_out: int, stats: MergeStats, kernel_impl: str = "xla"):
     """One wave's merges: the fit/hub split, the single-shot call for
     fitting nodes, the tree reduction for hubs, and the slab/count
     writeback. Shared verbatim by ``build_wavefront`` (every node) and
@@ -180,7 +186,8 @@ def _merge_wave(begins, ends, exact, counts, nodes, deg_lv, m_cap: int,
     if small.size:
         nb, ne, nx, ncnt = _single_shot_wave(
             begins, ends, exact, small, int(deg_lv[fits].max(initial=0)),
-            indptr, indices, tree_b_all, tree_e_all, w_out, stats)
+            indptr, indices, tree_b_all, tree_e_all, w_out, stats,
+            kernel_impl)
         sm = jnp.asarray(np.concatenate(
             [small, np.full(nb.shape[0] - small.size, n_dummy,
                             dtype=np.int64)]))
@@ -192,7 +199,8 @@ def _merge_wave(begins, ends, exact, counts, nodes, deg_lv, m_cap: int,
     if hubs.size:
         hb, he, hx, hcnt = reduce_wave(
             begins, ends, exact, hubs, indptr, indices,
-            tree_b_all[hubs], tree_e_all[hubs], w_out, chunk, stats)
+            tree_b_all[hubs], tree_e_all[hubs], w_out, chunk, stats,
+            kernel_impl)
         hj = jnp.asarray(hubs)
         begins = begins.at[hj].set(hb)
         ends = ends.at[hj].set(he)
@@ -202,7 +210,8 @@ def _merge_wave(begins, ends, exact, counts, nodes, deg_lv, m_cap: int,
 
 
 def _single_shot_wave(begins, ends, exact, nodes, d_max, indptr, indices,
-                      tree_b_all, tree_e_all, w_out: int, stats: MergeStats):
+                      tree_b_all, tree_e_all, w_out: int, stats: MergeStats,
+                      kernel_impl: str = "xla"):
     """One wave of fitting nodes in one `merge_cover_rows` call.
 
     The working width is sized to THIS wave's max fitting degree (bucketed
@@ -224,7 +233,8 @@ def _single_shot_wave(begins, ends, exact, nodes, d_max, indptr, indices,
     stats.record(b_pad, m_pad)
     return merge_cover_rows(begins, ends, exact, jnp.asarray(succ),
                             jnp.asarray(tb), jnp.asarray(te),
-                            k=w_out, w_out=w_out, m=m_pad)
+                            k=w_out, w_out=w_out, m=m_pad,
+                            impl=kernel_impl)
 
 
 def _drain_to_budget(ix: WavefrontIndex, dag: CSR, k: int,
@@ -265,7 +275,8 @@ def rebuild_affected(dag: CSR, tl: TreeLabels, affected: np.ndarray,
                      labels_old, k: int, variant: str = "L", c: int = 4,
                      merge_chunk: int = DEFAULT_MERGE_CHUNK,
                      m_cap: Optional[int] = None,
-                     budget: Optional[int] = None):
+                     budget: Optional[int] = None,
+                     kernel_impl: str = "xla"):
     """Affected-subgraph entry point of the staged pipeline (DESIGN.md §6).
 
     Re-runs PLAN → WAVES → DRAIN over only the nodes whose reachable set
@@ -329,7 +340,8 @@ def rebuild_affected(dag: CSR, tl: TreeLabels, affected: np.ndarray,
         waves_touched += 1
         begins, ends, exact = _merge_wave(
             begins, ends, exact, counts, nodes, deg[nodes], m_cap, chunk,
-            indptr, indices, tree_b_all, tree_e_all, w_out, stats)
+            indptr, indices, tree_b_all, tree_e_all, w_out, stats,
+            kernel_impl)
 
     wf = WavefrontIndex(begins=np.array(begins), ends=np.array(ends),
                         exact=np.array(exact), counts=counts, tl=tl, k=k,
@@ -379,7 +391,8 @@ def build_index_device(g: CSR, k: int = 2, variant: str = "G", c: int = 4,
                        use_seeds: bool = True, precondensed: bool = False,
                        merge_chunk: int = DEFAULT_MERGE_CHUNK,
                        m_cap: Optional[int] = None,
-                       budget: Optional[int] = None):
+                       budget: Optional[int] = None,
+                       kernel_impl: str = "auto"):
     """End-to-end device construction producing a host-queryable
     ``FerrariIndex`` — the `builder="wavefront"` target of ``reach.build``.
 
@@ -399,6 +412,8 @@ def build_index_device(g: CSR, k: int = 2, variant: str = "G", c: int = 4,
     if cover_method != "topgap":
         raise ValueError("the device builder covers with 'topgap' only "
                          f"(got cover_method={cover_method!r})")
+    from ...kernels.ops import resolve_kernel_impl
+    kernel_impl = resolve_kernel_impl(kernel_impl)
     st = BuildStats(n=g.n, m=g.m, budget=k * g.n, builder="wavefront")
 
     t0 = time.perf_counter()
@@ -415,7 +430,8 @@ def build_index_device(g: CSR, k: int = 2, variant: str = "G", c: int = 4,
     st.seconds_tree = time.perf_counter() - t0
 
     wf = build_wavefront(cond.dag, tl, k=k, c=c, variant=variant,
-                         budget=budget, merge_chunk=merge_chunk, m_cap=m_cap)
+                         budget=budget, merge_chunk=merge_chunk, m_cap=m_cap,
+                         kernel_impl=kernel_impl)
     st.seconds_assign = wf.seconds
     st.heap_recover_count = len(wf.drain_order)
     st.hub_nodes = wf.hub_nodes

@@ -75,7 +75,8 @@ def plan_chunks(counts: np.ndarray, chunk: int):
 def reduce_wave(begins, ends, exact, hubs: np.ndarray,
                 indptr: np.ndarray, indices: np.ndarray,
                 tree_b: np.ndarray, tree_e: np.ndarray,
-                w_out: int, chunk: int, stats: MergeStats):
+                w_out: int, chunk: int, stats: MergeStats,
+                kernel_impl: str = "xla"):
     """Tree-reduce every hub node of one wave; all hubs advance in lockstep.
 
     ``begins/ends/exact [n+1, W]``: the global label table (row n = dummy).
@@ -109,7 +110,8 @@ def reduce_wave(begins, ends, exact, hubs: np.ndarray,
     stats.record(g_pad, m)
     sb, se, sx, _ = merge_cover_rows(
         begins, ends, exact, jnp.asarray(group_idx),
-        jnp.asarray(eb), jnp.asarray(ee), k=w_out, w_out=w_out, m=m)
+        jnp.asarray(eb), jnp.asarray(ee), k=w_out, w_out=w_out, m=m,
+        impl=kernel_impl)
 
     # ---- rounds 2..R: chunks of partial rows out of the scratch table ----
     counts = n_groups
@@ -137,7 +139,7 @@ def reduce_wave(begins, ends, exact, hubs: np.ndarray,
         stats.record(g_pad, m)
         sb, se, sx, scnt = merge_cover_rows(
             tb, te, tx, jnp.asarray(group_idx), no_extra_b, no_extra_e,
-            k=w_out, w_out=w_out, m=m)
+            k=w_out, w_out=w_out, m=m, impl=kernel_impl)
         counts = n_groups
 
     # one partial per hub: rows 0..h-1 of the final scratch (starts[i] == i)

@@ -148,7 +148,9 @@ def expand_frontier_sharded(mesh, slab, meta, ell, tail_src, tail_dst,
                             is_hub, cs, ct, pad, *, n_nodes: int,
                             max_steps: int, cap: int,
                             dp_axes=("pod", "data"),
-                            can_reach_tail=None):
+                            can_reach_tail=None,
+                            step_impl: str = "xla",
+                            interpret: bool = False):
     """Sparse phase-2 frontier expansion under both placements.
 
     The UNKNOWN residue (cs, ct, pad — [Q] with Q divisible by the data
@@ -171,6 +173,12 @@ def expand_frontier_sharded(mesh, slab, meta, ell, tail_src, tail_dst,
     tail-extended hub mask, and base-NEG candidates that can still reach a
     delta tail stay expandable — same union-graph semantics as the
     single-device ``kernels.frontier.expand_frontier_overlay``.
+
+    ``step_impl`` selects the per-step core: "xla" runs
+    `kernels.frontier.expand_frontier_loop`; "pallas" runs the fused
+    probe/classify step of `kernels.frontier_fused` through the SAME
+    owned-rows + psum hooks (``interpret`` forwards to the kernels for
+    CPU testing). Answers are bit-identical (parity suites).
     """
     qspec = _qspec(mesh, dp_axes)
     overlay = can_reach_tail is not None
@@ -179,6 +187,26 @@ def expand_frontier_sharded(mesh, slab, meta, ell, tail_src, tail_dst,
              *crt_arg):
         def gather(table, ids):
             return jax.lax.psum(_own_rows(table, ids), "model")
+
+        if step_impl == "pallas":
+            from ..kernels import frontier_fused as kfused
+
+            def fetch_rows(cands, tgts):
+                return (gather(meta_l, cands), gather(meta_l, tgts),
+                        gather(slab_l, cands))
+
+            post = None
+            if overlay:
+                def post(v, cands):
+                    return jnp.where((v == kref.NEG) & crt_arg[0][cands],
+                                     jnp.int32(kref.UNKNOWN), v)
+
+            pos, ovf = kfused.expand_frontier_loop_fused(
+                ell_l, tsrc, tdst, hub, cs_l, ct_l, pad_l,
+                n_nodes=n_nodes, max_steps=max_steps, cap=cap,
+                gather_rows=gather, fetch_rows=fetch_rows,
+                post_verdict=post, interpret=interpret)
+            return pos, jnp.full_like(pos, ovf)
 
         def classify(cands, tgts):
             v = kref.interval_stab_classify_packed_ref(
@@ -244,7 +272,8 @@ class DistributedQueryEngine(DeviceQueryEngine):
                  use_pallas: bool = True, phase2_mode: str = "auto",
                  ell_width: Optional[int] = None, frontier_cap: int = 4096,
                  frontier_cap_max: int = 1 << 18, packed=None, ell=None,
-                 overlay_cap: int = 4096, dp_axes=("pod", "data")):
+                 overlay_cap: int = 4096, dp_axes=("pod", "data"),
+                 kernel_impl: str = "xla"):
         if placement not in PLACEMENTS:
             raise ValueError(f"placement must be one of {PLACEMENTS}, "
                              f"got {placement!r}")
@@ -259,7 +288,8 @@ class DistributedQueryEngine(DeviceQueryEngine):
                          phase2_mode=phase2_mode, ell_width=ell_width,
                          frontier_cap=frontier_cap,
                          frontier_cap_max=frontier_cap_max,
-                         packed=packed, ell=ell, overlay_cap=overlay_cap)
+                         packed=packed, ell=ell, overlay_cap=overlay_cap,
+                         kernel_impl=kernel_impl)
         self.placement = placement
         self.mesh = make_serving_mesh(placement, mesh_shape)
         self.dp_axes = dp_axes
@@ -297,7 +327,8 @@ class DistributedQueryEngine(DeviceQueryEngine):
         return expand_frontier_sharded(
             self.mesh, slab, meta, ell, tsrc, tdst, hub, cs, ct, pad,
             n_nodes=self.n_pad, max_steps=self.max_steps, cap=cap,
-            dp_axes=self.dp_axes)
+            dp_axes=self.dp_axes, step_impl=self.kernel_impl,
+            interpret=not kops._on_tpu())
 
     def _expand_overlay_fn(self, slab, meta, ell, tsrc, tdst, hub, crt,
                            cs, ct, pad, *, cap: int):
@@ -306,7 +337,8 @@ class DistributedQueryEngine(DeviceQueryEngine):
         return expand_frontier_sharded(
             self.mesh, slab, meta, ell, tsrc, tdst, hub, cs, ct, pad,
             n_nodes=self.n_pad, max_steps=self.packed.n, cap=cap,
-            dp_axes=self.dp_axes, can_reach_tail=crt)
+            dp_axes=self.dp_axes, can_reach_tail=crt,
+            step_impl=self.kernel_impl, interpret=not kops._on_tpu())
 
     # --------------------------------------------------------------- phase 1
     def classify(self, srcs, dsts):

@@ -118,7 +118,7 @@ class DeviceQueryEngine:
                  phase2_mode: str = "auto", ell_width: Optional[int] = None,
                  frontier_cap: int = 4096, frontier_cap_max: int = 1 << 18,
                  packed: Optional[PackedIndex] = None, ell=None,
-                 overlay_cap: int = 4096):
+                 overlay_cap: int = 4096, kernel_impl: str = "xla"):
         if phase2_mode not in ("auto", "dense", "sparse", "host"):
             raise ValueError(f"unknown phase2_mode {phase2_mode!r}")
         self.index = index
@@ -126,6 +126,10 @@ class DeviceQueryEngine:
         self._dev_cache = None        # lazy: distributed subclasses never
         self.comp = jnp.asarray(self.packed.comp)  # replicate the full table
         self.use_pallas = use_pallas
+        # resolved fused-kernel core of the sparse frontier step ("auto" →
+        # pallas on TPU/GPU, xla on CPU); needs the gather-fused layout,
+        # ops.expand_frontier falls back to the XLA loop without it
+        self.kernel_impl = ops.resolve_kernel_impl(kernel_impl)
         self.phase2_chunk = phase2_chunk
         self.ell_width = ell_width
         self.frontier_cap = frontier_cap
@@ -364,7 +368,8 @@ class DeviceQueryEngine:
         ell, tsrc, tdst, is_hub = self._ell()
         p, ovf = ops.expand_frontier(
             self.dev, ell, tsrc, tdst, is_hub, cs_j, ct_j,
-            jnp.asarray(pad), max_steps=self.max_steps, cap=cap)
+            jnp.asarray(pad), max_steps=self.max_steps, cap=cap,
+            kernel_impl=self.kernel_impl)
         return np.asarray(p), bool(ovf)
 
     def _residue_perm(self, q: int) -> Optional[np.ndarray]:
@@ -439,5 +444,6 @@ class DeviceQueryEngine:
         ell, tsrc_u, tdst_u, hub_u, crt = self._overlay_dev()
         p, ovf = ops.expand_frontier_overlay(
             self.dev, ell, tsrc_u, tdst_u, hub_u, crt, cs_j, ct_j,
-            jnp.asarray(pad), max_steps=self.packed.n, cap=cap)
+            jnp.asarray(pad), max_steps=self.packed.n, cap=cap,
+            kernel_impl=self.kernel_impl)
         return np.asarray(p), bool(ovf)

@@ -76,9 +76,22 @@ def expand_frontier_loop(ell, tail_src, tail_dst, is_hub, cs, ct, pad, *,
     q = cs.shape[0]
     m_t = int(tail_src.shape[0])
     vbits = key_bits(n)
+    # Key-space guard: a packed key (q << vbits) | v must stay strictly
+    # below SENTINEL = 2**31 - 1. vbits <= 30 leaves at least one query
+    # bit, and q < 2**(31 - vbits) (STRICT — max_batch() subtracts one)
+    # keeps even the all-ones key (q-1, n-1) from aliasing the sentinel
+    # when n is a power of two. Both are static shape facts, checked at
+    # trace time; violating either would silently alias real candidates
+    # with the unique() fill value and drop them.
+    if vbits > 30:
+        raise ValueError(
+            f"n_nodes={n} needs {vbits} node bits; packed (query, node) "
+            "keys support at most 30 (n < 2**30) — chunk the graph or use "
+            "the dense phase-2 path")
+    assert q <= cap and q < (1 << (31 - vbits)), (
+        f"batch of {q} queries exceeds max_batch({n}) = {max_batch(n)}")
     vmask = jnp.int32((1 << vbits) - 1)
     n_words = (n + 31) // 32
-    assert q <= cap and q < (1 << (31 - vbits))  # strict: key != SENTINEL
 
     qi = jnp.arange(q, dtype=jnp.int32)
     front0 = jnp.where(pad, SENTINEL, (qi << vbits) | cs)

@@ -69,6 +69,40 @@ def _stab_kernel(tgt_pi_ref, tau_s_ref, tau_t_ref, lvl_s_ref, lvl_t_ref,
     out_ref[...] = jnp.where(pos, POS, jnp.where(neg, NEG, UNKNOWN)).astype(jnp.int32)
 
 
+def _packed_verdict(meta_s, meta_t, slab, *, k):
+    """Shared verdict core of the packed-layout kernels: classify BQ lanes
+    from 4-word meta rows and a (2K, BQ) slab block. Used by the phase-1
+    stab kernel below AND by the fused phase-2 frontier-step kernel
+    (kernels/frontier_fused.py) so both paths share one set of rules.
+    Returns a (1, BQ) int32 verdict plane.
+    """
+    braw = slab[:k]
+    ends = slab[k:]
+    begins = braw & jnp.int32(0x7FFFFFFF)
+    exact = braw < 0
+
+    pt = meta_t[0:1, :] & jnp.int32(0xFFFFFF)
+    hit = (begins <= pt) & (pt <= ends)
+    hit_exact = jnp.any(hit & exact, axis=0, keepdims=True)
+    hit_any = jnp.any(hit, axis=0, keepdims=True)
+
+    lvl_s = (meta_s[0:1, :] >> 24) & jnp.int32(0xFF)
+    lvl_t = (meta_t[0:1, :] >> 24) & jnp.int32(0xFF)
+    neg = meta_s[1:2, :] >= meta_t[1:2, :]                  # τ (Eq. 11)
+    neg |= (lvl_s < 255) & (lvl_s <= lvl_t)                 # level (§5.2)
+    sp_s = meta_s[2:3, :].view(jnp.uint32)
+    sm_s = meta_s[3:4, :].view(jnp.uint32)
+    sp_t = meta_t[2:3, :].view(jnp.uint32)
+    sm_t = meta_t[3:4, :].view(jnp.uint32)
+    seed_pos = (sp_s & sm_t) != 0
+    neg |= (sm_s & ~sm_t) != 0
+    neg |= (sp_t & ~sp_s) != 0
+
+    pos = hit_exact | seed_pos
+    neg |= ~hit_any
+    return jnp.where(pos, POS, jnp.where(neg, NEG, UNKNOWN)).astype(jnp.int32)
+
+
 def _stab_packed_kernel(meta_s_ref, meta_t_ref, slab_ref, out_ref, *, k):
     """Gather-fused variant (§Perf iterations F1 + F4): 3 operands, 4-word
     meta rows (BQ lanes): word0 = π | min(blevel,255)<<24, word1 = τ,
@@ -76,33 +110,8 @@ def _stab_packed_kernel(meta_s_ref, meta_t_ref, slab_ref, out_ref, *, k):
     the SIGN bit (π < 2³¹ keeps it free), then ends. Saturated source
     levels soundly suppress the ≤-filter (see kernels/ref.py).
     """
-    slab = slab_ref[...]
-    braw = slab[:k]
-    ends = slab[k:]
-    begins = braw & jnp.int32(0x7FFFFFFF)
-    exact = braw < 0
-
-    pt = meta_t_ref[0:1, :] & jnp.int32(0xFFFFFF)
-    hit = (begins <= pt) & (pt <= ends)
-    hit_exact = jnp.any(hit & exact, axis=0, keepdims=True)
-    hit_any = jnp.any(hit, axis=0, keepdims=True)
-
-    lvl_s = (meta_s_ref[0:1, :] >> 24) & jnp.int32(0xFF)
-    lvl_t = (meta_t_ref[0:1, :] >> 24) & jnp.int32(0xFF)
-    neg = meta_s_ref[1:2, :] >= meta_t_ref[1:2, :]          # τ (Eq. 11)
-    neg |= (lvl_s < 255) & (lvl_s <= lvl_t)                 # level (§5.2)
-    sp_s = meta_s_ref[2:3, :].view(jnp.uint32)
-    sm_s = meta_s_ref[3:4, :].view(jnp.uint32)
-    sp_t = meta_t_ref[2:3, :].view(jnp.uint32)
-    sm_t = meta_t_ref[3:4, :].view(jnp.uint32)
-    seed_pos = (sp_s & sm_t) != 0
-    neg |= (sm_s & ~sm_t) != 0
-    neg |= (sp_t & ~sp_s) != 0
-
-    pos = hit_exact | seed_pos
-    neg |= ~hit_any
-    out_ref[...] = jnp.where(pos, POS,
-                             jnp.where(neg, NEG, UNKNOWN)).astype(jnp.int32)
+    out_ref[...] = _packed_verdict(meta_s_ref[...], meta_t_ref[...],
+                                   slab_ref[...], k=k)
 
 
 @functools.partial(jax.jit, static_argnames=("block_q", "interpret"))

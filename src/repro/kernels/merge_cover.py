@@ -1,0 +1,185 @@
+"""Pallas TPU kernel: fused merge + top-gap cover of sorted interval rows.
+
+The wavefront builder's per-wave compute (`core.build.merge_kernels.
+merge_cover_rows`) union-merges each group's begin-sorted interval slab and
+re-covers it to the budget width. The XLA reference path runs the merge as a
+`lax.scan` over the ``m`` sorted slots — per step it rewrites three ``[m]``
+carry buffers, so one wave moves O(m²) bytes per row through HBM and the
+cover's gap ranking pays a second full argsort. This kernel keeps the whole
+row resident in VMEM and makes both phases one pass:
+
+  pass 1 (sequential over the m sorted slots, vectorized over BLOCK_B rows
+  on the 128-wide lane dim): the union-merge recurrence with exact-coverage
+  tracking — identical update rules to ``_merge_sorted_row`` — but instead
+  of compacting merged intervals with per-lane dynamic scatters (unsupported
+  on the VPU), it stores four O(1) per-slot words into VMEM scratch: the
+  running group begin/end, the group-open flag, and the would-be exact flag.
+  Merged intervals stay *in place*: because INVALID begins sort to the tail,
+  valid slots form a prefix and every merged interval is the contiguous run
+  of slots between two open flags.
+
+  pass 2 (vectorized): group boundaries come from the open/valid flags, the
+  inter-group gaps from the shifted begins, the top-(k-1) gap selection from
+  k-1 masked argmax rounds (ties keep the leftmost row — the same order as
+  the reference's stable argsort), the output-group ids from a log-step
+  Hillis-Steele prefix sum, and the final ≤ w_out covered intervals from
+  per-output masked min/max/any reductions over the slot axis.
+
+Grid: 1-D over row tiles of BLOCK_B lanes; `tree_merge.py`'s constant-width
+chunks map 1:1 onto grid tiles. VMEM per tile = 7 · m · BLOCK_B · 4 B
+(3 input slabs + 4 scratch planes) ≈ 7.3 MiB at the widest single-shot
+width m = 2049 and BLOCK_B = 128 — under half of VMEM, leaving room for
+double-buffered pipelining. Bit-identical to the XLA path by construction;
+asserted in tests/test_merge_cover_kernel.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# plain int (not jnp.int32): a module-level jax scalar would be captured as
+# a constant by the kernel trace, which pallas_call rejects
+INVALID = 2**31 - 1
+DEFAULT_BLOCK_B = 128
+
+
+def _merge_cover_kernel(b_ref, e_ref, x_ref,
+                        nb_ref, ne_ref, nx_ref, cnt_ref,
+                        cb_s, ce_s, ex_s, op_s, *, k, w_out, m):
+    bq = b_ref.shape[1]
+
+    # ---- pass 1: union-merge recurrence (sequential over the m slots) ----
+    def step(i, carry):
+        cb, ce, ece, holed, opened = carry
+        bi = pl.load(b_ref, (pl.dslice(i, 1), slice(None)))
+        ei = pl.load(e_ref, (pl.dslice(i, 1), slice(None)))
+        xi = pl.load(x_ref, (pl.dslice(i, 1), slice(None))) != 0
+        valid = bi < INVALID
+        cur_exact = (~holed) & (ece >= ce)
+
+        touching = bi == ce + 1
+        overlap = bi <= ce
+        type_ok = cur_exact == xi
+        do_merge = opened & valid & (overlap | (touching & type_ok))
+        do_open = valid & ~do_merge
+
+        ce_m = jnp.maximum(ce, ei)
+        ece_m = jnp.where(xi & (bi <= ece + 1), jnp.maximum(ece, ei), ece)
+        holed_m = holed | (xi & (bi > ece + 1))
+
+        cb_n = jnp.where(do_open, bi, cb)
+        ce_n = jnp.where(do_open, ei, jnp.where(do_merge, ce_m, ce))
+        ece_n = jnp.where(do_open, jnp.where(xi, ei, bi - 1),
+                          jnp.where(do_merge, ece_m, ece))
+        holed_n = jnp.where(do_open, False,
+                            jnp.where(do_merge, holed_m, holed))
+        exf = (~holed_n) & (ece_n >= ce_n)   # exact flag if closed after i
+
+        idx = (pl.dslice(i, 1), slice(None))
+        pl.store(cb_s, idx, cb_n)
+        pl.store(ce_s, idx, ce_n)
+        pl.store(ex_s, idx, exf.astype(jnp.int32))
+        pl.store(op_s, idx, do_open.astype(jnp.int32))
+        return cb_n, ce_n, ece_n, holed_n, opened | valid
+
+    init = (jnp.zeros((1, bq), jnp.int32),
+            jnp.full((1, bq), -1, jnp.int32),
+            jnp.full((1, bq), -2, jnp.int32),
+            jnp.ones((1, bq), jnp.bool_),
+            jnp.zeros((1, bq), jnp.bool_))
+    jax.lax.fori_loop(0, m, step, init)
+
+    # ---- pass 2: top-gap cover over the in-place merged groups ----------
+    b = b_ref[...]
+    valid = b < INVALID                       # valid slots form a prefix
+    opn = op_s[...] != 0
+    cbm = cb_s[...]
+    cem = ce_s[...]
+    exm = ex_s[...] != 0
+
+    pad_f = jnp.zeros((1, bq), jnp.bool_)
+    open_next = jnp.concatenate([opn[1:], pad_f], axis=0)
+    valid_next = jnp.concatenate([valid[1:], pad_f], axis=0)
+    b_next = jnp.concatenate(
+        [b[1:], jnp.full((1, bq), INVALID, jnp.int32)], axis=0)
+    is_last = valid & (open_next | ~valid_next)
+
+    # gap between a group and its successor lives on the group's last slot
+    gap = jnp.where(is_last & valid_next, b_next - cem - 1, -1)
+
+    # keep the k-1 largest gaps; ties pick the smallest slot — the exact
+    # set the reference's stable argsort(-gaps) rank < k-1 keeps
+    rows = jax.lax.broadcasted_iota(jnp.int32, (m, bq), 0)
+    keep = jnp.zeros((m, bq), jnp.bool_)
+    gw = gap
+    for _ in range(k - 1):
+        mx = jnp.max(gw, axis=0, keepdims=True)
+        cand = (gw == mx) & (mx > -1)
+        selrow = jnp.min(jnp.where(cand, rows, m), axis=0, keepdims=True)
+        sel = rows == selrow
+        keep |= sel
+        gw = jnp.where(sel, -2, gw)
+
+    # output-group id = exclusive prefix count of kept cuts above each slot
+    c = keep.astype(jnp.int32)
+    sh = 1
+    while sh < m:
+        c = c + jnp.concatenate(
+            [jnp.zeros((sh, bq), jnp.int32), c[:-sh]], axis=0)
+        sh *= 2
+    out_id = c - keep.astype(jnp.int32)       # exclusive
+
+    for j in range(w_out):
+        mj = valid & (out_id == j)
+        nbj = jnp.min(jnp.where(mj, cbm, INVALID), axis=0, keepdims=True)
+        nej = jnp.max(jnp.where(mj, cem, -1), axis=0, keepdims=True)
+        szj = jnp.sum((mj & opn).astype(jnp.int32), axis=0, keepdims=True)
+        anyx = jnp.any(mj & is_last & exm, axis=0, keepdims=True)
+        nxj = (szj == 1) & anyx
+        nb_ref[j:j + 1, :] = jnp.where(szj > 0, nbj, INVALID)
+        ne_ref[j:j + 1, :] = jnp.where(szj > 0, nej, -1)
+        nx_ref[j:j + 1, :] = nxj.astype(jnp.int32)
+
+    cnt = jnp.sum(opn.astype(jnp.int32), axis=0, keepdims=True)
+    cnt_ref[...] = jnp.minimum(cnt, k)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "w_out", "block_b", "interpret"))
+def merge_cover_sorted_rows(cb, ce, cx, *, k: int, w_out: int,
+                            block_b: int = DEFAULT_BLOCK_B,
+                            interpret: bool = False):
+    """Fused merge + cover of begin-sorted rows.
+
+    cb/ce/cx: [B, m] int32, sorted by cb per row (INVALID-padded tails).
+    Returns (nb [B, w_out] int32, ne [B, w_out] int32, nx [B, w_out] bool,
+    cnt [B] int32) — bit-identical to the vmapped
+    ``_merge_sorted_row`` + ``_topgap_cover_row`` reference.
+    """
+    B, m = cb.shape
+    bp = -(-B // block_b) * block_b
+
+    def prep(a, fill):
+        return jnp.pad(a, ((0, bp - B), (0, 0)), constant_values=fill).T
+
+    # padded lanes hold zero valid intervals -> cnt 0, INVALID slabs
+    args = (prep(cb, INVALID), prep(ce, -1), prep(cx.astype(jnp.int32), 0))
+    grid = (bp // block_b,)
+    slab_spec = pl.BlockSpec((m, block_b), lambda i: (0, i))
+    out_spec = pl.BlockSpec((w_out, block_b), lambda i: (0, i))
+    row_spec = pl.BlockSpec((1, block_b), lambda i: (0, i))
+    nb, ne, nx, cnt = pl.pallas_call(
+        functools.partial(_merge_cover_kernel, k=k, w_out=w_out, m=m),
+        grid=grid,
+        in_specs=[slab_spec] * 3,
+        out_specs=[out_spec] * 3 + [row_spec],
+        out_shape=[jax.ShapeDtypeStruct((w_out, bp), jnp.int32)] * 3
+        + [jax.ShapeDtypeStruct((1, bp), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((m, block_b), jnp.int32)] * 4,
+        interpret=interpret,
+    )(*args)
+    return nb.T[:B], ne.T[:B], nx.T[:B] != 0, cnt[0, :B]

@@ -17,6 +17,9 @@ from .batched_mp import batched_mp as _batched_mp
 from .frontier import expand_frontier as _expand_frontier
 from .frontier import expand_frontier_overlay as _expand_frontier_overlay
 from .frontier import max_batch as frontier_max_batch  # noqa: F401 (re-export)
+from .frontier_fused import expand_frontier_fused as _expand_frontier_fused
+from .frontier_fused import (
+    expand_frontier_overlay_fused as _expand_frontier_overlay_fused)
 from .flash_attention import flash_attention as _flash
 from .interval_stab import interval_stab_classify as _stab
 from .interval_stab import interval_stab_classify_packed as _stab_packed
@@ -24,10 +27,29 @@ from .retrieval_score import retrieval_score as _retrieval_score
 
 NEG, POS, UNKNOWN = ref.NEG, ref.POS, ref.UNKNOWN
 
+KERNEL_IMPLS = ("xla", "pallas", "auto")
+
 
 @functools.lru_cache(maxsize=1)
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def resolve_kernel_impl(impl: str) -> str:
+    """Resolve the ``IndexSpec.kernel_impl`` knob to a concrete core.
+
+    "xla"/"pallas" are explicit; "auto" picks the fused Pallas kernels on
+    an accelerator backend (TPU/GPU) and the XLA reference path on CPU,
+    where the kernels would run under the (slower-to-trace) interpreter.
+    Explicit "pallas" on CPU still works — interpreter mode — and is how
+    CI exercises the fused kernels without an accelerator.
+    """
+    if impl not in KERNEL_IMPLS:
+        raise ValueError(
+            f"kernel_impl must be one of {KERNEL_IMPLS}, got {impl!r}")
+    if impl == "auto":
+        return "pallas" if jax.default_backend() in ("tpu", "gpu") else "xla"
+    return impl
 
 
 def attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
@@ -124,26 +146,42 @@ def classify_all_nodes_vs_target(packed_dev: dict, ct, *, node_chunk=None,
 
 
 def expand_frontier(packed_dev: dict, ell, tail_src, tail_dst, is_hub,
-                    cs, ct, pad, *, max_steps: int, cap: int):
+                    cs, ct, pad, *, max_steps: int, cap: int,
+                    kernel_impl: str = "xla"):
     """Sparse phase-2 engine: batched guided BFS over the ELL + tail layout
     (kernels.frontier). cs/ct: [Q] condensed ids of UNKNOWN queries; pad
     marks batch-padding slots; is_hub gates the tail sweep per step.
     Returns (pos [Q] bool, overflow bool) — under overflow, positives are
     sound and the caller retries the rest with a larger cap. Chunk size is
     bounded by ``frontier_max_batch(n)``.
+
+    ``kernel_impl`` (resolved — "xla" or "pallas") selects the step core:
+    "pallas" runs the fused probe/classify step of kernels.frontier_fused,
+    which needs the gather-fused slab/meta layout; without it the call
+    falls back to the XLA loop (same answers by the parity suite).
     """
+    if kernel_impl == "pallas" and "slab" in packed_dev:
+        return _expand_frontier_fused(
+            packed_dev, ell, tail_src, tail_dst, is_hub, cs, ct, pad,
+            max_steps=max_steps, cap=cap, interpret=not _on_tpu())
     return _expand_frontier(packed_dev, ell, tail_src, tail_dst, is_hub,
                             cs, ct, pad, max_steps=max_steps, cap=cap)
 
 
 def expand_frontier_overlay(packed_dev: dict, ell, tail_src, tail_dst,
                             is_hub, can_reach_tail, cs, ct, pad, *,
-                            max_steps: int, cap: int):
+                            max_steps: int, cap: int,
+                            kernel_impl: str = "xla"):
     """Union-graph (base + delta slab) frontier expansion for live-update
     serving (kernels.frontier / reach.dynamic, DESIGN.md §6). Interface as
     ``expand_frontier`` plus ``can_reach_tail`` [n] bool; ``max_steps``
     must bound the union BFS depth (callers pass n — delta edges can form
     cycles over the base DAG)."""
+    if kernel_impl == "pallas" and "slab" in packed_dev:
+        return _expand_frontier_overlay_fused(
+            packed_dev, ell, tail_src, tail_dst, is_hub, can_reach_tail,
+            cs, ct, pad, max_steps=max_steps, cap=cap,
+            interpret=not _on_tpu())
     return _expand_frontier_overlay(
         packed_dev, ell, tail_src, tail_dst, is_hub, can_reach_tail,
         cs, ct, pad, max_steps=max_steps, cap=cap)

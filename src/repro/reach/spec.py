@@ -22,6 +22,7 @@ BUILDERS = ("host", "wavefront")
 PHASE2_MODES = ("auto", "dense", "sparse", "host")
 PLACEMENTS = ("single", "replicated", "sharded")
 COMPACT_MODES = ("auto", "incremental", "full")
+KERNEL_IMPLS = ("xla", "pallas", "auto")
 # the knobs baked into a built index — immutable once an artifact exists;
 # everything else is a serve-time knob a loader may freely override
 BUILD_FIELDS = ("k", "variant", "c", "cover_method", "n_seeds",
@@ -62,6 +63,12 @@ class IndexSpec:
     use_pallas: bool = True
     frontier_cap: int = 4096
     frontier_cap_max: int = 1 << 18
+    # fused-kernel core for the two hot loops (merge-cover build + frontier
+    # step): xla = reference paths, pallas = fused VMEM kernels, auto =
+    # pallas on TPU/GPU and xla on CPU. An EXECUTION knob, not a build
+    # field — both impls are bit-identical (parity suites), so artifacts
+    # built either way are interchangeable.
+    kernel_impl: str = "auto"
     # ------------------------------------------------- session micro-batch
     max_batch: int = 16384
     min_bucket: int = 256
@@ -122,6 +129,9 @@ class IndexSpec:
                     f"{2 * w_out + 1}")
         elif self.m_cap is not None and self.m_cap < 3:
             raise ValueError(f"m_cap must be >= 3, got {self.m_cap}")
+        if self.kernel_impl not in KERNEL_IMPLS:
+            raise ValueError(f"kernel_impl must be one of {KERNEL_IMPLS}, "
+                             f"got {self.kernel_impl!r}")
         if self.phase2_mode not in PHASE2_MODES:
             raise ValueError(f"phase2_mode must be one of {PHASE2_MODES}, "
                              f"got {self.phase2_mode!r}")
@@ -245,6 +255,12 @@ class IndexSpec:
         ap.add_argument("--frontier-cap", type=int, default=d.frontier_cap)
         ap.add_argument("--frontier-cap-max", type=int,
                         default=d.frontier_cap_max)
+        ap.add_argument("--kernel-impl", default=d.kernel_impl,
+                        choices=KERNEL_IMPLS, dest="kernel_impl",
+                        help="fused-kernel core for merge-cover build and "
+                             "frontier expansion: auto = pallas on "
+                             "TPU/GPU, xla on CPU (bit-identical either "
+                             "way)")
         ap.add_argument("--max-batch", type=int, default=d.max_batch,
                         help="QuerySession micro-batch ceiling")
         ap.add_argument("--min-bucket", type=int, default=d.min_bucket,
@@ -305,6 +321,7 @@ class IndexSpec:
             use_pallas=not args.no_pallas,
             frontier_cap=args.frontier_cap,
             frontier_cap_max=args.frontier_cap_max,
+            kernel_impl=args.kernel_impl,
             max_batch=args.max_batch,
             min_bucket=args.min_bucket,
             overlay_cap=args.overlay_cap,
@@ -341,6 +358,7 @@ class IndexSpec:
             argv.append("--no-pallas")
         argv += ["--frontier-cap", str(self.frontier_cap),
                  "--frontier-cap-max", str(self.frontier_cap_max),
+                 "--kernel-impl", self.kernel_impl,
                  "--max-batch", str(self.max_batch),
                  "--min-bucket", str(self.min_bucket),
                  "--overlay-cap", str(self.overlay_cap)]
@@ -374,7 +392,8 @@ def build(g, spec: IndexSpec = IndexSpec()):
             g, k=spec.k, variant=spec.variant, c=spec.c,
             cover_method=spec.cover_method, n_seeds=spec.n_seeds,
             use_seeds=spec.use_seeds, precondensed=spec.precondensed,
-            merge_chunk=spec.merge_chunk, m_cap=spec.m_cap)
+            merge_chunk=spec.merge_chunk, m_cap=spec.m_cap,
+            kernel_impl=spec.kernel_impl)
     from ..core.ferrari import build_index
     variant = "G" if spec.variant == "full" else spec.variant
     return build_index(g, k=spec.k, variant=variant, c=spec.c,
@@ -399,7 +418,7 @@ def make_engine(index, spec: IndexSpec = IndexSpec(), *, packed=None,
         use_pallas=spec.use_pallas, phase2_mode=spec.phase2_mode,
         ell_width=spec.ell_width, frontier_cap=spec.frontier_cap,
         frontier_cap_max=spec.frontier_cap_max, packed=packed, ell=ell,
-        overlay_cap=spec.overlay_cap)
+        overlay_cap=spec.overlay_cap, kernel_impl=spec.kernel_impl)
     if spec.placement == "single":
         from ..core.query_jax import DeviceQueryEngine
         return DeviceQueryEngine(index, **common)

@@ -1,0 +1,244 @@
+"""Fused frontier-step Pallas kernel (kernels/frontier_fused.py): bit-parity
+with the XLA while_loop of kernels/frontier.py at the loop, engine, and
+sharded-placement levels, overflow-flag agreement under tight caps, the
+dynamic-overlay variant, and the packed (query, node) key-space guards
+near the 2**31 boundary.
+
+Runs in Pallas interpreter mode on CPU (the tier1-kernels CI job); the
+same assertions hold compiled on TPU.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ferrari import build_index
+from repro.core.packed import pack_index
+from repro.core.query import brute_force_closure
+from repro.core.query_jax import DeviceQueryEngine
+from repro.core.workload import positive_queries, random_queries
+from repro.graphs.generators import layered_dag, random_dag, scale_free_digraph
+from repro.kernels import ops
+from repro.kernels.frontier import (SENTINEL, expand_frontier,
+                                    expand_frontier_loop,
+                                    expand_frontier_overlay, key_bits,
+                                    max_batch)
+from repro.kernels.frontier_fused import (expand_frontier_fused,
+                                          expand_frontier_loop_fused,
+                                          expand_frontier_overlay_fused)
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _drop_compile_caches():
+    # interpret-mode pallas programs compile to very large XLA executables;
+    # holding ~30 of them for the rest of the single-process tier-1 run
+    # pushes the CPU backend's compile state far enough that later modules'
+    # compiles can segfault — release them when this module finishes
+    yield
+    jax.clear_caches()
+
+
+def _setup(g, k, variant, use_seeds, ell_width=None):
+    ix = build_index(g, k=k, variant=variant, use_seeds=use_seeds)
+    p = pack_index(ix)
+    dev = p.to_device(None, fused=True)
+    ell, tsrc, tdst = p.ell_layout(width=ell_width)
+    is_hub = np.zeros(p.n, bool)
+    is_hub[tsrc] = True
+    return p, dev, (jnp.asarray(ell), jnp.asarray(tsrc), jnp.asarray(tdst),
+                    jnp.asarray(is_hub))
+
+
+def _queries(g, p, n_rand, n_pos, seed):
+    qs, qt = random_queries(g, n_rand, seed=seed)
+    ps, pt = positive_queries(g, n_pos, seed=seed + 1)
+    qs = np.concatenate([qs, ps])
+    qt = np.concatenate([qt, pt])
+    return jnp.asarray(p.comp[qs]), jnp.asarray(p.comp[qt])
+
+
+def _both(p, dev, layout, cs, ct, cap):
+    pad = jnp.zeros(cs.shape, bool)
+    a = expand_frontier(dev, *layout, cs, ct, pad, max_steps=p.n, cap=cap)
+    b = expand_frontier_fused(dev, *layout, cs, ct, pad, max_steps=p.n,
+                              cap=cap, interpret=True)
+    return ((np.asarray(a[0]), bool(a[1])), (np.asarray(b[0]), bool(b[1])))
+
+
+# ----------------------------------------------------- loop-level parity --
+@pytest.mark.parametrize("graph,k,variant,seeds,width,cap", [
+    (lambda: random_dag(300, 2.0, seed=0), 2, "G", True, None, 4096),
+    (lambda: random_dag(300, 2.0, seed=1), 2, "G", True, None, 4096),
+    (lambda: scale_free_digraph(400, 3.0, seed=5), 2, "G", True, None, 32768),
+    (lambda: layered_dag(500, 20, 3.0, seed=3), 1, "L", False, None, 4096),
+    # width=2 forces hubs into the COO tail: the tail sweep branch runs
+    (lambda: layered_dag(400, 16, 3.0, seed=4), 1, "L", False, 2, 4096),
+])
+def test_loop_parity(graph, k, variant, seeds, width, cap):
+    g = graph()
+    p, dev, layout = _setup(g, k, variant, seeds, ell_width=width)
+    cs, ct = _queries(g, p, 256, 64, seed=9)
+    (pa, ova), (pb, ovb) = _both(p, dev, layout, cs, ct, cap=cap)
+    assert not ova and not ovb
+    np.testing.assert_array_equal(pa, pb)
+
+
+def test_overflow_flag_agreement():
+    """Under a too-small cap both impls must raise the overflow flag, and
+    any positives either reports must be true reachability (soundness —
+    the `_sparse_driver` retry policy depends on exactly this)."""
+    g = layered_dag(500, 20, 3.0, seed=3)
+    tc = brute_force_closure(g)
+    p, dev, layout = _setup(g, 1, "L", False)
+    qs, qt = random_queries(g, 256, seed=2)
+    cs, ct = jnp.asarray(p.comp[qs]), jnp.asarray(p.comp[qt])
+    (pa, ova), (pb, ovb) = _both(p, dev, layout, cs, ct, cap=512)
+    assert ova and ovb
+    truth = np.array([tc[s, t] for s, t in zip(qs, qt)])
+    assert not (pa & ~truth).any()
+    assert not (pb & ~truth).any()
+
+
+@pytest.mark.parametrize("mode", ["none", "some"])
+def test_overlay_parity(mode):
+    """Dynamic-overlay variant: the NEG -> UNKNOWN downgrade through
+    `post_verdict` must keep the fused loop bit-identical to the XLA one."""
+    g = layered_dag(400, 16, 3.0, seed=4)
+    p, dev, layout = _setup(g, 1, "L", False, ell_width=2)
+    rng = np.random.default_rng(0)
+    crt = jnp.asarray(np.zeros(p.n, bool) if mode == "none"
+                      else rng.random(p.n) < 0.15)
+    cs, ct = _queries(g, p, 256, 0, seed=2)
+    pad = jnp.zeros(cs.shape, bool)
+    a = expand_frontier_overlay(dev, *layout, crt, cs, ct, pad,
+                                max_steps=p.n, cap=4096)
+    b = expand_frontier_overlay_fused(dev, *layout, crt, cs, ct, pad,
+                                      max_steps=p.n, cap=4096,
+                                      interpret=True)
+    assert bool(a[1]) == bool(b[1]) is False
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+
+
+# ------------------------------------------------------ engine dispatch --
+def test_engine_parity_and_dispatch():
+    """DeviceQueryEngine(kernel_impl='pallas') answers bit-identically to
+    the XLA engine and to brute force, through the real sparse driver."""
+    g = layered_dag(500, 20, 3.0, seed=3)
+    tc = brute_force_closure(g)
+    ix = build_index(g, k=1, variant="L", use_seeds=False)
+    qs, qt = random_queries(g, 1500, seed=0)
+    want = np.array([tc[s, t] for s, t in zip(qs, qt)])
+    a = DeviceQueryEngine(ix, phase2_mode="sparse", kernel_impl="xla")
+    b = DeviceQueryEngine(ix, phase2_mode="sparse", kernel_impl="pallas")
+    np.testing.assert_array_equal(a.answer(qs, qt), want)
+    np.testing.assert_array_equal(b.answer(qs, qt), want)
+    assert b.stats.phase2_sparse > 0 and b.stats.phase2_host == 0
+
+
+def test_resolve_kernel_impl():
+    assert ops.resolve_kernel_impl("xla") == "xla"
+    assert ops.resolve_kernel_impl("pallas") == "pallas"
+    # CPU test process: auto must fall back to the XLA paths
+    assert ops.resolve_kernel_impl("auto") == "xla"
+    with pytest.raises(ValueError):
+        ops.resolve_kernel_impl("cuda")
+
+
+# ------------------------------------- key-space guards near 2**31 ------
+def test_key_packing_boundary():
+    """The minus-one in max_batch(): at q = max_batch the largest packed
+    key stays below SENTINEL; one more query and the all-ones key of
+    (last query, n-1) aliases SENTINEL exactly when n is a power of two —
+    unique() would then silently drop a live candidate as fill."""
+    for log_n in (10, 15, 20, 29, 30):
+        n = 1 << log_n
+        vb = key_bits(n)
+        assert vb == log_n
+        top_ok = ((max_batch(n) - 1) << vb) | (n - 1)
+        assert top_ok < int(SENTINEL)
+        top_bad = (max_batch(n) << vb) | (n - 1)   # batch of max_batch + 1
+        assert top_bad == int(SENTINEL)
+
+
+def _dummy_loop_args(q):
+    z = jnp.zeros((4, 2), jnp.int32)
+    return (z, jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32),
+            jnp.zeros((4,), bool), jnp.zeros((q,), jnp.int32),
+            jnp.zeros((q,), jnp.int32), jnp.zeros((q,), bool))
+
+
+def test_keyspace_guard_vbits_too_large():
+    """n >= 2**31 cannot be packed: both loops must refuse loudly instead
+    of silently aliasing keys. The guard fires before any allocation."""
+    kw = dict(n_nodes=2**31, max_steps=1, cap=16,
+              gather_rows=lambda t, i: t[i])
+    with pytest.raises(ValueError, match="at most 30"):
+        expand_frontier_loop(*_dummy_loop_args(4), **kw,
+                             classify=lambda c, t: c)
+    with pytest.raises(ValueError, match="at most 30"):
+        expand_frontier_loop_fused(*_dummy_loop_args(4), **kw,
+                                   fetch_rows=lambda c, t: (c, c, c))
+
+
+def test_keyspace_guard_batch_over_max():
+    """A batch one past max_batch(n) must be rejected at trace time (the
+    driver chunks to max_batch; anything larger could alias SENTINEL)."""
+    n = 1 << 20
+    q = max_batch(n) + 2                 # == 1 << (31 - vbits): over by one
+    kw = dict(n_nodes=n, max_steps=1, cap=q,
+              gather_rows=lambda t, i: t[i])
+    with pytest.raises(AssertionError, match="max_batch"):
+        expand_frontier_loop(*_dummy_loop_args(q), **kw,
+                             classify=lambda c, t: c)
+    with pytest.raises(AssertionError, match="max_batch"):
+        expand_frontier_loop_fused(*_dummy_loop_args(q), **kw,
+                                   fetch_rows=lambda c, t: (c, c, c))
+
+
+# ------------------------------------------------- sharded placement ----
+TEMPLATE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+{body}
+"""
+
+
+def test_sharded_fused_parity():
+    """kernel_impl='pallas' under the sharded placement: the fused step's
+    fetch_rows hook (three psum'd owned-rows gathers) must answer
+    bit-identically to the single-device XLA engine."""
+    body = r"""
+from repro import reach
+from repro.core.workload import positive_queries, random_queries
+from repro.graphs.generators import scale_free_digraph
+
+assert len(jax.devices()) == 8
+g = scale_free_digraph(4000, 3.0, seed=11)
+base = dict(k=1, variant="L", n_seeds=32, phase2_mode="sparse",
+            max_batch=4096)
+single = reach.QuerySession(reach.build(g, reach.IndexSpec(**base)),
+                            reach.IndexSpec(**base))
+spec_p = reach.IndexSpec(**base, placement="sharded", mesh="2x4",
+                         kernel_impl="pallas")
+sharded = reach.QuerySession(reach.build(g, spec_p), spec_p)
+qs, qt = random_queries(g, 2048, seed=5)
+ps, pt = positive_queries(g, 512, seed=6)
+for s, t in ((qs, qt), (ps, pt)):
+    np.testing.assert_array_equal(single.query(s, t), sharded.query(s, t))
+assert sharded.stats.phase2_sparse > 0 and sharded.stats.phase2_host == 0
+print("sharded fused parity OK")
+"""
+    r = subprocess.run(
+        [sys.executable, "-c", TEMPLATE.format(body=body)],
+        capture_output=True, text=True, timeout=900,
+        env={**os.environ, "PYTHONPATH": str(SRC)})
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "sharded fused parity OK" in r.stdout

@@ -1,0 +1,228 @@
+"""Fused merge-cover Pallas kernel (kernels/merge_cover.py): bit-parity
+with the lax.scan reference of core/build/merge_kernels.py, property-tested
+edge cases of the reference contract (zero-interval rows, already-within-k
+no-op re-cover, w_out below the merged run count), the `impl=` dispatch of
+`merge_cover_rows`, and full-build parity through `build_index_device`
+(including a hub-stress graph that exercises the tree reduction).
+
+Runs in Pallas interpreter mode on CPU (the tier1-kernels CI job); the
+same assertions hold compiled on TPU.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.core.build import build_index_device
+from repro.core.build.merge_kernels import (_merge_sorted_row,
+                                            _topgap_cover_row,
+                                            merge_cover_rows)
+from repro.kernels.merge_cover import INVALID, merge_cover_sorted_rows
+from repro.graphs.csr import build_csr
+from repro.graphs.generators import layered_dag, scale_free_digraph
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _drop_compile_caches():
+    # interpret-mode pallas programs compile to very large XLA executables;
+    # holding ~30 of them for the rest of the single-process tier-1 run
+    # pushes the CPU backend's compile state far enough that later modules'
+    # compiles can segfault — release them when this module finishes
+    yield
+    jax.clear_caches()
+
+
+# ------------------------------------------------------------ reference --
+def _reference(cb, ce, cx, k, w_out):
+    def row(b, e, x):
+        ob, oe, ox, cnt = _merge_sorted_row(b, e, x)
+        return _topgap_cover_row(ob, oe, ox, cnt, k, w_out)
+    return jax.vmap(row)(jnp.asarray(cb), jnp.asarray(ce),
+                         jnp.asarray(cx, jnp.int32))
+
+
+def _random_rows(rng, B, m, density, max_len=6, spread=200):
+    """Begin-sorted rows of disjoint-ish random intervals, INVALID tails."""
+    cb = np.full((B, m), INVALID, np.int32)
+    ce = np.full((B, m), -1, np.int32)
+    cx = np.zeros((B, m), np.int32)
+    for i in range(B):
+        n_iv = rng.binomial(m, density)
+        if n_iv == 0:
+            continue
+        starts = np.sort(rng.integers(0, spread, size=n_iv))
+        ends = starts + rng.integers(0, max_len, size=n_iv)
+        order = np.argsort(starts, kind="stable")
+        cb[i, :n_iv] = starts[order]
+        ce[i, :n_iv] = ends[order]
+        cx[i, :n_iv] = rng.integers(0, 2, size=n_iv)
+    return cb, ce, cx
+
+
+def _assert_parity(cb, ce, cx, k, w_out):
+    rb, re_, rx, rc = _reference(cb, ce, cx, k, w_out)
+    nb, ne, nx, nc = merge_cover_sorted_rows(
+        jnp.asarray(cb), jnp.asarray(ce), jnp.asarray(cx),
+        k=k, w_out=w_out, interpret=True)
+    np.testing.assert_array_equal(np.asarray(nb), np.asarray(rb))
+    np.testing.assert_array_equal(np.asarray(ne), np.asarray(re_))
+    np.testing.assert_array_equal(np.asarray(nx), np.asarray(rx) != 0)
+    np.testing.assert_array_equal(np.asarray(nc), np.asarray(rc))
+
+
+# ------------------------------------------------------- shape sweeps ----
+@pytest.mark.parametrize("B,m,k,w_out,density", [
+    (16, 5, 2, 2, 0.6),
+    (64, 33, 2, 8, 0.5),
+    (128, 65, 4, 4, 0.3),
+    (200, 17, 1, 1, 0.9),     # k=1: cover everything into one interval
+    (32, 129, 8, 8, 0.2),
+    (48, 16, 3, 6, 0.0),      # all rows empty
+])
+def test_kernel_matches_reference(B, m, k, w_out, density):
+    rng = np.random.default_rng(B * 1000 + m)
+    cb, ce, cx = _random_rows(rng, B, m, density)
+    _assert_parity(cb, ce, cx, k, w_out)
+
+
+def test_kernel_non_multiple_block():
+    """Row counts that don't divide the lane block exercise the padding."""
+    rng = np.random.default_rng(7)
+    cb, ce, cx = _random_rows(rng, 130, 9, 0.5)
+    _assert_parity(cb, ce, cx, 2, 2)
+
+
+# ------------------------------------------- property tests (satellites) --
+@given(st.integers(0, 10_000), st.integers(1, 6), st.integers(1, 6))
+@settings(max_examples=30)
+def test_property_zero_interval_rows(seed, k, w_out):
+    """Rows with NO valid intervals: cnt 0 and all-INVALID output slabs,
+    identically in both impls, even mixed into a batch with live rows."""
+    rng = np.random.default_rng(seed)
+    cb, ce, cx = _random_rows(rng, 24, 13, 0.4)
+    empty = rng.random(24) < 0.5
+    cb[empty] = INVALID
+    ce[empty] = -1
+    cx[empty] = 0
+    _assert_parity(cb, ce, cx, k, w_out)
+    _, _, _, nc = merge_cover_sorted_rows(
+        jnp.asarray(cb), jnp.asarray(ce), jnp.asarray(cx),
+        k=k, w_out=w_out, interpret=True)
+    assert (np.asarray(nc)[empty] == 0).all()
+
+
+@given(st.integers(0, 10_000), st.integers(2, 8))
+@settings(max_examples=30)
+def test_property_already_within_k_noop(seed, k):
+    """Rows whose merged runs already number <= k: the re-cover must be a
+    no-op — the output is exactly the merged runs, exactness preserved."""
+    rng = np.random.default_rng(seed)
+    B, m = 16, 12
+    cb = np.full((B, m), INVALID, np.int32)
+    ce = np.full((B, m), -1, np.int32)
+    cx = np.zeros((B, m), np.int32)
+    for i in range(B):
+        n_iv = rng.integers(1, k + 1)           # <= k disjoint intervals
+        pos = 0
+        for j in range(n_iv):
+            pos += rng.integers(2, 10)          # gap >= 1: never merge
+            ln = rng.integers(0, 5)
+            cb[i, j] = pos
+            ce[i, j] = pos + ln
+            cx[i, j] = rng.integers(0, 2)
+            pos += ln + 1
+    _assert_parity(cb, ce, cx, k, k)
+    nb, ne, nx, nc = merge_cover_sorted_rows(
+        jnp.asarray(cb), jnp.asarray(ce), jnp.asarray(cx),
+        k=k, w_out=k, interpret=True)
+    np.testing.assert_array_equal(np.asarray(nb), cb[:, :k])
+    np.testing.assert_array_equal(np.asarray(ne), ce[:, :k])
+    np.testing.assert_array_equal(np.asarray(nx), cx[:, :k] != 0)
+
+
+@given(st.integers(0, 10_000), st.integers(1, 3))
+@settings(max_examples=30)
+def test_property_w_out_below_run_count(seed, w_out):
+    """w_out smaller than the merged run count: both impls keep the same
+    leading w_out covered intervals and drop the rest identically."""
+    rng = np.random.default_rng(seed)
+    cb, ce, cx = _random_rows(rng, 32, 21, 0.8, max_len=1, spread=500)
+    k = w_out + 3                                # cover wants > w_out groups
+    _assert_parity(cb, ce, cx, k, w_out)
+
+
+# -------------------------------------------------- dispatch + full build --
+def test_merge_cover_rows_impl_dispatch():
+    """`merge_cover_rows(impl=...)` routes to the fused kernel and stays
+    bit-identical to the default XLA path through the shared prologue."""
+    rng = np.random.default_rng(3)
+    T, W, B, D = 40, 3, 16, 4
+    begins = np.full((T, W), INVALID, np.int32)
+    ends = np.full((T, W), -1, np.int32)
+    exact = np.zeros((T, W), bool)
+    for t in range(T - 1):                       # last row stays the dummy
+        nb = rng.integers(0, W + 1)
+        s = np.sort(rng.integers(0, 100, size=nb))
+        begins[t, :nb] = s
+        ends[t, :nb] = s + rng.integers(0, 5, size=nb)
+        exact[t, :nb] = rng.random(nb) < 0.5
+    gi = rng.integers(0, T, size=(B, D))
+    eb = np.where(rng.random(B) < 0.5,
+                  rng.integers(0, 100, size=B), INVALID).astype(np.int32)
+    ee = np.where(eb < INVALID, eb + rng.integers(0, 9, size=B),
+                  -1).astype(np.int32)
+    m = D * W + 1
+    args = (jnp.asarray(begins), jnp.asarray(ends), jnp.asarray(exact),
+            jnp.asarray(gi), jnp.asarray(eb), jnp.asarray(ee))
+    ax = merge_cover_rows(*args, k=2, w_out=W, m=m)
+    ap = merge_cover_rows(*args, k=2, w_out=W, m=m, impl="pallas")
+    for x, p in zip(ax, ap):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(p))
+
+
+def _labels_equal(ix_a, ix_b):
+    assert len(ix_a.labels) == len(ix_b.labels)
+    for v in range(len(ix_a.labels)):
+        for a, b in zip(ix_a.labels[v], ix_b.labels[v]):
+            np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("variant,k", [("L", 2), ("G", 2)])
+def test_full_build_parity(variant, k):
+    g = scale_free_digraph(1500, 3.0, seed=2)
+    _labels_equal(build_index_device(g, k=k, variant=variant,
+                                     kernel_impl="xla"),
+                  build_index_device(g, k=k, variant=variant,
+                                     kernel_impl="pallas"))
+
+
+def _hub_stress_graph(n=3000, hub_deg=600, seed=5):
+    """benchmarks/construction.py's hub shape: a populous wave whose one
+    hub forces the chunked tree reduction through the fused kernel."""
+    rng = np.random.default_rng(seed)
+    n_src = n // 2
+    m = int(n * 1.5)
+    src = rng.integers(0, n_src, size=m, dtype=np.int64)
+    dst = rng.integers(n_src, n, size=m, dtype=np.int64)
+    tgt = rng.choice(np.arange(n_src, n, dtype=np.int64), size=hub_deg,
+                     replace=False)
+    return build_csr(n, np.concatenate([src, np.zeros(hub_deg, np.int64)]),
+                     np.concatenate([dst, tgt]))
+
+
+def test_full_build_parity_hub_stress():
+    """Hub fan-in forces the chunked tree reduction through the fused
+    kernel; labels must stay bit-identical to the XLA build."""
+    g = _hub_stress_graph()
+    _labels_equal(build_index_device(g, k=2, variant="G", kernel_impl="xla"),
+                  build_index_device(g, k=2, variant="G",
+                                     kernel_impl="pallas"))
+
+
+def test_build_auto_resolves_on_cpu():
+    """kernel_impl='auto' must resolve to the XLA path on CPU (no
+    interpreter in production builds) and still build correctly."""
+    g = layered_dag(400, 16, 3.0, seed=1)
+    _labels_equal(build_index_device(g, k=2, variant="L", kernel_impl="auto"),
+                  build_index_device(g, k=2, variant="L", kernel_impl="xla"))
