@@ -1,0 +1,113 @@
+"""Shared envelope for every ``BENCH_*.json`` artifact.
+
+Each benchmark emitter keeps its own payload layout (CI jobs read
+top-level keys like ``d["datasets"]`` / ``d["open_loop"]`` /
+``d["kernels"]`` directly), so the envelope is *merged into* the output
+dict rather than wrapping it:
+
+    out = {"datasets": {...}}
+    attach_envelope(out, bench="query")
+    # out now also carries schema_version / bench / timestamp / host /
+    # device_kind / metrics_snapshot
+
+``validate(d)`` is the bench-smoke CI contract: it raises ``ValueError``
+with a readable message when an artifact is missing envelope fields or
+carries malformed ones, so schema drift fails loudly instead of
+producing silently-incomparable trend reports (benchmarks/report.py).
+"""
+from __future__ import annotations
+
+import json
+import socket
+import time
+from typing import Any, Dict
+
+SCHEMA_VERSION = 1
+
+#: envelope keys every BENCH_*.json must carry at top level
+ENVELOPE_KEYS = ("schema_version", "bench", "timestamp", "host",
+                 "device_kind", "metrics_snapshot")
+
+
+def _device_kind() -> str:
+    """Platform of the default jax backend; "unavailable" when jax cannot
+    initialise (schema attachment must never sink a benchmark run)."""
+    try:
+        import jax
+        return str(jax.devices()[0].platform)
+    except Exception:
+        return "unavailable"
+
+
+def attach_envelope(out: Dict[str, Any], bench: str,
+                    with_metrics: bool = True) -> Dict[str, Any]:
+    """Merge the shared envelope into ``out`` (mutates and returns it).
+
+    ``bench`` is the artifact's short name ("query", "build", "serve",
+    "dynamic", "distributed"). ``with_metrics=False`` skips the registry
+    snapshot for emitters that never touch the serving stack.
+    """
+    snap: Dict[str, Any] = {}
+    if with_metrics:
+        try:
+            from repro.obs import metrics_snapshot
+            snap = metrics_snapshot()
+        except Exception:
+            snap = {}
+    out["schema_version"] = SCHEMA_VERSION
+    out["bench"] = bench
+    out["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+    out["host"] = socket.gethostname()
+    out["device_kind"] = _device_kind()
+    out["metrics_snapshot"] = snap
+    return out
+
+
+def validate(d: Dict[str, Any], path: str = "<bench>") -> None:
+    """Raise ValueError unless ``d`` carries a well-formed envelope."""
+    if not isinstance(d, dict):
+        raise ValueError(f"{path}: artifact is {type(d).__name__}, not a dict")
+    missing = [k for k in ENVELOPE_KEYS if k not in d]
+    if missing:
+        raise ValueError(f"{path}: missing envelope keys {missing}")
+    if d["schema_version"] != SCHEMA_VERSION:
+        raise ValueError(f"{path}: schema_version={d['schema_version']!r}, "
+                         f"expected {SCHEMA_VERSION}")
+    if not isinstance(d["bench"], str) or not d["bench"]:
+        raise ValueError(f"{path}: 'bench' must be a non-empty string")
+    ts = d["timestamp"]
+    if not isinstance(ts, str) or "T" not in ts:
+        raise ValueError(f"{path}: 'timestamp' must be ISO-8601, got {ts!r}")
+    if not isinstance(d["metrics_snapshot"], dict):
+        raise ValueError(f"{path}: 'metrics_snapshot' must be a dict")
+
+
+def validate_file(path: str) -> Dict[str, Any]:
+    """Load + validate one artifact; returns the parsed dict."""
+    with open(path) as f:
+        d = json.load(f)
+    validate(d, path=path)
+    return d
+
+
+def main(argv=None) -> int:
+    """CLI for CI: ``python -m benchmarks._bench_schema BENCH_*.json``."""
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="+", help="BENCH_*.json files to validate")
+    args = ap.parse_args(argv)
+    bad = 0
+    for p in args.paths:
+        try:
+            d = validate_file(p)
+        except (OSError, json.JSONDecodeError, ValueError) as e:
+            print(f"FAIL {p}: {e}")
+            bad += 1
+            continue
+        print(f"ok   {p}  bench={d['bench']} ts={d['timestamp']} "
+              f"device={d['device_kind']}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -155,6 +155,8 @@ def run_bench_json(json_path: str, datasets=None, k: int = 2,
          f"device={row['device_build_seconds']:.3f}s;"
          f"kernel_impl={kernel_impl}")
 
+    from ._bench_schema import attach_envelope
+    attach_envelope(out, bench="build")
     with open(json_path, "w") as f:
         json.dump(out, f, indent=1, sort_keys=True)
     print(f"# wrote {json_path}", flush=True)

@@ -107,6 +107,8 @@ def run_bench_json(out_path: str = "BENCH_distributed.json",
     if n_dev >= 4:
         out["residue_balance"] = run_residue_balance(
             n_queries=max(2_000, n_queries // 10), seed=seed)
+    from ._bench_schema import attach_envelope
+    attach_envelope(out, bench="distributed")
     with open(out_path, "w") as f:
         json.dump(out, f, indent=1)
     print(f"wrote {out_path}", flush=True)

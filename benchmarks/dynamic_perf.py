@@ -138,6 +138,8 @@ def run_bench_json(json_path: str, datasets=None, n_queries: int = 20_000,
     out = {"datasets": {}}
     for name in datasets or DEFAULT_DATASETS:
         out["datasets"][name] = run_dataset(name, n_queries, cap, k)
+    from ._bench_schema import attach_envelope
+    attach_envelope(out, bench="dynamic")
     with open(json_path, "w") as f:
         json.dump(out, f, indent=1, sort_keys=True)
     print(f"# wrote {json_path}", flush=True)

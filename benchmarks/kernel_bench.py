@@ -191,6 +191,8 @@ def main():
         with open(args.json) as f:
             out = json.load(f)
     out["kernels"] = sec
+    from ._bench_schema import attach_envelope
+    attach_envelope(out, bench="query")   # merges into BENCH_query.json
     with open(args.json, "w") as f:
         json.dump(out, f, indent=1)
     print(f"# wrote kernels section -> {args.json}", flush=True)

@@ -184,6 +184,8 @@ def run_bench_json(out_path: str = "BENCH_query.json", datasets=None,
                  f"p2={st.phase2_queries}")
             sess.reset_stats()
         out["datasets"][name] = entry
+    from ._bench_schema import attach_envelope
+    attach_envelope(out, bench="query")
     with open(out_path, "w") as f:
         json.dump(out, f, indent=1)
     print(f"wrote {out_path}", flush=True)

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...graphs.csr import CSR
+from ...obs import register_stats, span
 from ..tree_cover import TreeLabels, build_tree_labels, wavefront_schedule
 from .merge_kernels import INVALID, merge_cover_rows
 from .tree_merge import MergeStats, _pow2, reduce_wave
@@ -129,12 +130,13 @@ def build_wavefront(dag: CSR, tl: Optional[TreeLabels] = None, k: int = 2,
     """
     t0 = time.perf_counter()
     n = dag.n
-    if tl is None:
-        tl = build_tree_labels(dag)
-    w_out = k if variant == "L" else c * k
-    m_cap, chunk = effective_widths(w_out, merge_chunk, m_cap)
-    order, bounds = wavefront_schedule(tl.blevel[:n])
-    deg = dag.degrees()
+    with span("build.plan", n=int(n)):
+        if tl is None:
+            tl = build_tree_labels(dag)
+        w_out = k if variant == "L" else c * k
+        m_cap, chunk = effective_widths(w_out, merge_chunk, m_cap)
+        order, bounds = wavefront_schedule(tl.blevel[:n])
+        deg = dag.degrees()
     stats = MergeStats()
 
     begins = jnp.full((n + 1, w_out), INVALID, jnp.int32)
@@ -147,14 +149,16 @@ def build_wavefront(dag: CSR, tl: Optional[TreeLabels] = None, k: int = 2,
     indptr, indices = dag.indptr, dag.indices
 
     n_levels = len(bounds) - 1
-    for lv in range(n_levels):
-        nodes = order[bounds[lv]: bounds[lv + 1]]
-        if nodes.size == 0:
-            continue
-        begins, ends, exact = _merge_wave(
-            begins, ends, exact, counts, nodes, deg[nodes], m_cap, chunk,
-            indptr, indices, tree_b_all, tree_e_all, w_out, stats,
-            kernel_impl)
+    with span("build.waves", levels=int(n_levels)):
+        for lv in range(n_levels):
+            nodes = order[bounds[lv]: bounds[lv + 1]]
+            if nodes.size == 0:
+                continue
+            with span("build.wave", level=int(lv), nodes=int(nodes.size)):
+                begins, ends, exact = _merge_wave(
+                    begins, ends, exact, counts, nodes, deg[nodes], m_cap,
+                    chunk, indptr, indices, tree_b_all, tree_e_all, w_out,
+                    stats, kernel_impl)
 
     ix = WavefrontIndex(begins=np.array(begins), ends=np.array(ends),
                         exact=np.array(exact), counts=counts, tl=tl, k=k,
@@ -165,7 +169,8 @@ def build_wavefront(dag: CSR, tl: Optional[TreeLabels] = None, k: int = 2,
                         peak_slab_bytes=stats.peak_slab_bytes)
 
     if variant == "G":
-        ix.drain_order = _drain_to_budget(ix, dag, k, budget or k * n)
+        with span("build.drain", budget=int(budget or k * n)):
+            ix.drain_order = _drain_to_budget(ix, dag, k, budget or k * n)
     ix.seconds = time.perf_counter() - t0
     return ix
 
@@ -332,16 +337,18 @@ def rebuild_affected(dag: CSR, tl: TreeLabels, affected: np.ndarray,
     order, bounds = wavefront_schedule(tl.blevel[:n])
     n_levels = len(bounds) - 1
     waves_touched = 0
-    for lv in range(n_levels):
-        nodes = order[bounds[lv]: bounds[lv + 1]]
-        nodes = nodes[affected[nodes]]
-        if nodes.size == 0:
-            continue
-        waves_touched += 1
-        begins, ends, exact = _merge_wave(
-            begins, ends, exact, counts, nodes, deg[nodes], m_cap, chunk,
-            indptr, indices, tree_b_all, tree_e_all, w_out, stats,
-            kernel_impl)
+    with span("build.waves", levels=int(n_levels), affected=True):
+        for lv in range(n_levels):
+            nodes = order[bounds[lv]: bounds[lv + 1]]
+            nodes = nodes[affected[nodes]]
+            if nodes.size == 0:
+                continue
+            waves_touched += 1
+            with span("build.wave", level=int(lv), nodes=int(nodes.size)):
+                begins, ends, exact = _merge_wave(
+                    begins, ends, exact, counts, nodes, deg[nodes], m_cap,
+                    chunk, indptr, indices, tree_b_all, tree_e_all, w_out,
+                    stats, kernel_impl)
 
     wf = WavefrontIndex(begins=np.array(begins), ends=np.array(ends),
                         exact=np.array(exact), counts=counts, tl=tl, k=k,
@@ -415,18 +422,22 @@ def build_index_device(g: CSR, k: int = 2, variant: str = "G", c: int = 4,
     from ...kernels.ops import resolve_kernel_impl
     kernel_impl = resolve_kernel_impl(kernel_impl)
     st = BuildStats(n=g.n, m=g.m, budget=k * g.n, builder="wavefront")
+    register_stats("reach_build", st)
 
     t0 = time.perf_counter()
-    if precondensed:
-        cond = Condensation(comp=np.arange(g.n, dtype=np.int32), n_comp=g.n,
-                            dag=g, comp_size=np.ones(g.n, dtype=np.int64))
-    else:
-        cond = condense(g)
+    with span("build.condense", n=int(g.n), m=int(g.m)):
+        if precondensed:
+            cond = Condensation(comp=np.arange(g.n, dtype=np.int32),
+                                n_comp=g.n, dag=g,
+                                comp_size=np.ones(g.n, dtype=np.int64))
+        else:
+            cond = condense(g)
     st.seconds_condense = time.perf_counter() - t0
     st.n_comp = cond.n_comp
 
     t0 = time.perf_counter()
-    tl = build_tree_labels(cond.dag)
+    with span("build.tree"):
+        tl = build_tree_labels(cond.dag)
     st.seconds_tree = time.perf_counter() - t0
 
     wf = build_wavefront(cond.dag, tl, k=k, c=c, variant=variant,
@@ -448,7 +459,8 @@ def build_index_device(g: CSR, k: int = 2, variant: str = "G", c: int = 4,
     seeds = None
     if use_seeds:
         t0 = time.perf_counter()
-        seeds = build_seed_labels(cond.dag, n_seeds=n_seeds)
+        with span("build.seeds", n_seeds=int(n_seeds)):
+            seeds = build_seed_labels(cond.dag, n_seeds=n_seeds)
         st.seconds_seeds = time.perf_counter() - t0
 
     return FerrariIndex(cond=cond, tl=tl, labels=labels, seeds=seeds, k=k,

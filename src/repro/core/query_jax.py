@@ -43,6 +43,7 @@ Two phases (DESIGN.md §3):
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from functools import partial
 from typing import Optional
@@ -52,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops
+from ..obs import get_tracer, register_stats, span
 from .ferrari import FerrariIndex
 from .packed import PackedIndex, pack_index
 from .query import QueryEngine, ResettableStats
@@ -135,6 +137,12 @@ class DeviceQueryEngine:
         self.frontier_cap = frontier_cap
         self.frontier_cap_max = frontier_cap_max
         self.stats = ServeStats()
+        register_stats("reach_engine", self, provider=lambda e: e.stats)
+        # wall-clock of the LAST finish_answer's two phases — always on
+        # (two clock reads per slab), feeds the frontend's slow-slab log
+        # without requiring tracing
+        self.last_phase1_s = 0.0
+        self.last_phase2_s = 0.0
         n = self.packed.n
         self.max_steps = int(index.tl.blevel[:n].max(initial=0)) + 1
         if phase2_mode == "auto":
@@ -256,46 +264,61 @@ class DeviceQueryEngine:
 
     def finish_answer(self, handle) -> np.ndarray:
         """Block on a ``start_answer`` handle and run phase 2 on the
-        UNKNOWN residue. ``answer()`` is exactly start + finish."""
+        UNKNOWN residue. ``answer()`` is exactly start + finish.
+
+        The ``phase1`` span covers blocking on the classify verdict (i.e.
+        the device compute start_answer dispatched) plus the residue
+        bookkeeping; ``phase2`` covers the residue driver. Their
+        wall-clock also lands in ``last_phase1_s``/``last_phase2_s``
+        regardless of tracing (the frontend's slow-slab log reads them)."""
         verdict, cs, ct = handle
-        verdict = np.asarray(verdict)
-        out = verdict == ops.POS
-        neg_mask = verdict == ops.NEG
-        unknown = np.flatnonzero(verdict == ops.UNKNOWN)
-        self.stats.n_queries += len(verdict)
-        self.stats.phase1_pos += int(out.sum())
-        overlay = self._overlay_live
-        if overlay:
-            # base-NEG is no longer final when the source can reach a
-            # delta tail: those queries join the union-graph expansion
-            # (and leave the phase-1 mix — phase1_pos/neg/phase2_queries
-            # stay a partition of n_queries under churn)
-            reopened = np.flatnonzero(
-                neg_mask & self.overlay.can_reach_tail[np.asarray(cs)])
-            residue = np.union1d(unknown, reopened)
-            self.stats.phase1_neg += int(neg_mask.sum()) - reopened.size
-        else:
-            residue = unknown
-            self.stats.phase1_neg += int(neg_mask.sum())
-        self.stats.phase2_queries += residue.size
+        t0 = time.perf_counter()
+        with span("phase1", q=int(verdict.shape[0])):
+            verdict = np.asarray(verdict)
+            out = verdict == ops.POS
+            neg_mask = verdict == ops.NEG
+            unknown = np.flatnonzero(verdict == ops.UNKNOWN)
+            self.stats.n_queries += len(verdict)
+            self.stats.phase1_pos += int(out.sum())
+            overlay = self._overlay_live
+            if overlay:
+                # base-NEG is no longer final when the source can reach a
+                # delta tail: those queries join the union-graph expansion
+                # (and leave the phase-1 mix — phase1_pos/neg/
+                # phase2_queries stay a partition of n_queries under churn)
+                reopened = np.flatnonzero(
+                    neg_mask & self.overlay.can_reach_tail[np.asarray(cs)])
+                residue = np.union1d(unknown, reopened)
+                self.stats.phase1_neg += int(neg_mask.sum()) - reopened.size
+            else:
+                residue = unknown
+                self.stats.phase1_neg += int(neg_mask.sum())
+            self.stats.phase2_queries += residue.size
+        t1 = time.perf_counter()
+        self.last_phase1_s = t1 - t0
+        self.last_phase2_s = 0.0
         if residue.size == 0:
             return out
-        cs_u = np.asarray(cs)[residue]
-        ct_u = np.asarray(ct)[residue]
-        if self.phase2_mode == "dense":
-            self.stats.phase2_dense += residue.size
-            res = (self._phase2_dense_overlay(cs_u, ct_u) if overlay
-                   else self._phase2_dense(cs_u, ct_u))
-        elif self.phase2_mode == "sparse":
-            res = (self._phase2_sparse_overlay(cs_u, ct_u) if overlay
-                   else self._phase2_sparse(cs_u, ct_u))
-        else:
-            self.stats.phase2_host += residue.size
-            res = (self._phase2_host_overlay(cs_u, ct_u) if overlay
-                   else self._phase2_host(cs_u, ct_u))
-        out[residue] = res
-        if overlay:
-            self.stats.n_overlay_hits += int((res & neg_mask[residue]).sum())
+        with span("phase2", mode=self.phase2_mode,
+                  residue=int(residue.size)):
+            cs_u = np.asarray(cs)[residue]
+            ct_u = np.asarray(ct)[residue]
+            if self.phase2_mode == "dense":
+                self.stats.phase2_dense += residue.size
+                res = (self._phase2_dense_overlay(cs_u, ct_u) if overlay
+                       else self._phase2_dense(cs_u, ct_u))
+            elif self.phase2_mode == "sparse":
+                res = (self._phase2_sparse_overlay(cs_u, ct_u) if overlay
+                       else self._phase2_sparse(cs_u, ct_u))
+            else:
+                self.stats.phase2_host += residue.size
+                res = (self._phase2_host_overlay(cs_u, ct_u) if overlay
+                       else self._phase2_host(cs_u, ct_u))
+            out[residue] = res
+            if overlay:
+                self.stats.n_overlay_hits += int(
+                    (res & neg_mask[residue]).sum())
+        self.last_phase2_s = time.perf_counter() - t1
         return out
 
     # --------------------------------------------------------------- phase 2
@@ -413,11 +436,15 @@ class DeviceQueryEngine:
                 # the retry — mask them out and rerun with 4x the capacity
                 cap *= 4
                 self.stats.sparse_retries += 1
+                get_tracer().instant("phase2.overflow_retry", cap=cap)
                 if cap > self.frontier_cap_max:
                     unresolved = np.flatnonzero(~pos & ~pad)
                     self.stats.phase2_host += unresolved.size
                     self.stats.phase2_sparse -= unresolved.size
-                    pos[unresolved] = host_fn(cs[unresolved], ct[unresolved])
+                    with span("phase2.host_fallback",
+                              q=int(unresolved.size)):
+                        pos[unresolved] = host_fn(cs[unresolved],
+                                                  ct[unresolved])
                     break
                 pad = pad | pos
                 if pad.all():

@@ -31,6 +31,7 @@ from pathlib import Path
 
 import numpy as np
 
+from .. import obs
 from ..core.workload import (positive_queries, random_edge_inserts,
                              random_queries)
 from ..graphs.generators import scale_free_digraph
@@ -48,7 +49,9 @@ def serve_reachability(n_nodes: int, avg_deg: float, n_queries: int,
                        spec: IndexSpec | None = None,
                        index_dir: str | None = None,
                        n_updates: int = 0, update_batch: int = 256,
-                       n_tenants: int = 0, request_size: int = 64):
+                       n_tenants: int = 0, request_size: int = 64,
+                       metrics_dump: str | None = None,
+                       trace_out: str | None = None):
     """Serve a synthetic reachability workload through the facade.
 
     ``spec`` is the one source of truth; the individual knob kwargs
@@ -74,6 +77,10 @@ def serve_reachability(n_nodes: int, avg_deg: float, n_queries: int,
     / ``spec.cache_entries`` are the knobs (``--deadline-us``,
     ``--tenant-queue-cap``, ``--cache``).
     """
+    if trace_out is not None:
+        # spans record from here on: build stages, every slab's lifecycle,
+        # phase-1/phase-2 splits — exported Perfetto-loadable at the end
+        obs.enable_tracing()
     if spec is None:
         spec = IndexSpec(k=(None if variant == "full" else k),
                          variant=variant, n_seeds=n_seeds,
@@ -219,10 +226,14 @@ def serve_reachability(n_nodes: int, avg_deg: float, n_queries: int,
               f"{frontend_stats.deadline_misses} deadline misses")
         for name in sorted(frontend_stats.tenants):
             t = frontend_stats.tenants[name]
+            # percentiles are None until a tenant completes a request
+            p50 = "n/a" if t.p50_us is None else f"{t.p50_us:.0f}us"
+            p99 = "n/a" if t.p99_us is None else f"{t.p99_us:.0f}us"
             print(f"  {name}: {t.completed}/{t.requests} requests "
-                  f"p50={t.p50_us:.0f}us p99={t.p99_us:.0f}us "
+                  f"p50={p50} p99={p99} "
                   f"misses={t.deadline_misses} "
                   f"cache_hits={t.cache_short_circuits}")
+        print(fe.slowlog.format_report())
         if frontend_stats.cache is not None:
             c = frontend_stats.cache
             print(f"  cache: {c['entries']}/{c['capacity']} entries, "
@@ -264,6 +275,20 @@ def serve_reachability(n_nodes: int, avg_deg: float, n_queries: int,
               f"overlay fill {update_stats.overlay_edges}/"
               f"{spec.overlay_cap}, epoch {sess.epoch}")
         print(f"churn stats: {update_stats}")
+    if metrics_dump is not None:
+        import json
+        snap = obs.metrics_snapshot()
+        if n_tenants > 0:
+            snap["slowlog"] = fe.slowlog.as_dict()
+        with open(metrics_dump, "w") as f:
+            json.dump(snap, f, indent=2, default=str)
+        print(f"metrics snapshot written to {metrics_dump}", flush=True)
+    if trace_out is not None:
+        tr = obs.get_tracer()
+        obs.export_chrome_trace(trace_out)
+        print(f"trace written to {trace_out} "
+              f"({len(tr.events())} spans, {tr.n_dropped} dropped) — "
+              "load it at https://ui.perfetto.dev", flush=True)
     return {"seconds": dt, "ns_per_query": dt / n_queries * 1e9,
             "positive": pos, "stats": stats, "build_seconds": t_build,
             "loaded": loaded, "trace_count": sess.trace_count,
@@ -323,6 +348,14 @@ def main():
                          "tenants (0 = skip)")
     ap.add_argument("--request-size", type=int, default=64,
                     help="query pairs per frontend request")
+    ap.add_argument("--metrics-dump", default=None, metavar="PATH",
+                    help="write the obs metrics-registry snapshot (JSON: "
+                         "all counters/histograms/stat views + the "
+                         "frontend slow-slab log) here on exit")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable trace spans and write a Chrome "
+                         "trace-event JSON here on exit (load at "
+                         "ui.perfetto.dev)")
     IndexSpec.add_cli_args(ap)       # --k --variant --phase2 --max-batch ...
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--batch", type=int, default=4,
@@ -340,7 +373,9 @@ def main():
                            n_updates=args.updates,
                            update_batch=args.update_batch,
                            n_tenants=args.tenants,
-                           request_size=args.request_size)
+                           request_size=args.request_size,
+                           metrics_dump=args.metrics_dump,
+                           trace_out=args.trace_out)
     else:
         serve_lm(args.arch, args.batch, args.prompt_len, args.gen_len)
 

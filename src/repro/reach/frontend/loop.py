@@ -28,6 +28,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from ...obs import SlowLog, get_registry, get_tracer, register_stats, span
 from .cache import AnswerCache
 from .router import QueryRouter, Rejected, Request  # noqa: F401 (re-export)
 from .stats import FrontendStats, LatencyTrack, TenantSnapshot
@@ -40,6 +41,8 @@ class _Cut:
     staged: object              # QuerySession._StagedBatch
     version: tuple              # graph version the slab is computed under
     q: int                      # real queries in the slab
+    t_assemble: float = 0.0     # clock() when the slab was cut
+    stage_s: float = 0.0        # host->device staging wall time
 
 
 def _pow2ceil(x: int) -> int:
@@ -113,6 +116,21 @@ class Frontend:
         self._deadline_flushes = 0
         self._full_flushes = 0
         self._forced_flushes = 0
+        # telemetry (repro.obs, DESIGN.md §8): the slow-slab/deadline-miss
+        # ring log is always on (its inputs are clock reads the EWMA takes
+        # anyway); the histograms share the process registry so a
+        # --metrics-dump carries them; the stats view is weakly held
+        self._lat_cap = spec.latency_window
+        self.slowlog = SlowLog()
+        reg = get_registry()
+        self._h_service = reg.histogram(
+            "frontend_slab_service_seconds",
+            "begin->finish wall time per device slab")
+        self._h_queue_wait = reg.histogram(
+            "frontend_queue_wait_seconds",
+            "submit->slab-assembly wait per request")
+        register_stats("reach_frontend", self,
+                       provider=lambda fe: fe._flat_stats())
 
     # ------------------------------------------------------------- tenants
     def register_tenant(self, name: str, *,
@@ -129,7 +147,7 @@ class Frontend:
         if acc is None:
             acc = {"requests": 0, "queries": 0, "completed": 0,
                    "deadline_misses": 0, "short_circuits": 0,
-                   "lat": LatencyTrack()}
+                   "lat": LatencyTrack(self._lat_cap)}
             self._acc[name] = acc
         return acc
 
@@ -160,8 +178,9 @@ class Frontend:
             # peek, don't count: a request the router then rejects must
             # leave no trace in hit_rate or LRU recency — the probe is
             # committed only once the request is accepted (or completes)
-            c_ans, hit = self.cache.lookup(self._graph_version(), srcs,
-                                           dsts, commit=False)
+            with span("cache_probe", tenant=tenant, n=int(n)):
+                c_ans, hit = self.cache.lookup(self._graph_version(), srcs,
+                                               dsts, commit=False)
             answers[hit] = c_ans[hit]
             pending = np.flatnonzero(~hit)
         else:
@@ -234,13 +253,20 @@ class Frontend:
         if self._staged is not None:
             cut = self._staged
             self._staged = None
+            # the slab's lifetime span is explicit begin/end on its own
+            # parity track: it OVERLAPS the next slab's staging, so it
+            # must neither use the implicit span stack nor share a track
+            # with its neighbour (repro.obs.trace)
+            seq = self._n_batches
+            tok = get_tracer().begin("slab", track=f"slab-{seq % 2}",
+                                     slab=seq, q=cut.q)
             # re-read the clock at dispatch: _finish() above may have
             # blocked on the previous slab, and the service EWMA must
             # measure THIS slab's begin->finish time, not the prior
             # slab's phase 2 plus the inter-poll gap (an inflated EWMA
             # over-leads the deadline flush, shrinking batches)
             self._inflight = (cut, self.session.begin(cut.staged),
-                              self.clock())
+                              self.clock(), tok)
         return done
 
     @property
@@ -274,11 +300,24 @@ class Frontend:
         reqs = self.router.take_batch(self.batch_target)
         if not reqs:
             return
-        cat_s = np.concatenate([r.srcs[r.pending] for r in reqs])
-        cat_t = np.concatenate([r.dsts[r.pending] for r in reqs])
-        staged = self.session.stage(cat_s, cat_t)   # H2D transfer starts
+        t_a = self.clock()
+        tr = get_tracer()
+        for r in reqs:
+            wait = max(0.0, t_a - r.t_submit)
+            self._h_queue_wait.observe(wait)
+            if tr.enabled:
+                # retroactive: the span is reconstructed from the submit
+                # timestamp the request already carries
+                tr.record("queue_wait", r.t_submit, wait, track="requests",
+                          ticket=r.ticket, tenant=r.tenant)
+        with span("coalesce", reason=reason, n_reqs=len(reqs)):
+            cat_s = np.concatenate([r.srcs[r.pending] for r in reqs])
+            cat_t = np.concatenate([r.dsts[r.pending] for r in reqs])
+            staged = self.session.stage(cat_s, cat_t)  # H2D starts
+        stage_s = max(0.0, self.clock() - t_a)
         self._staged = _Cut(reqs=reqs, staged=staged,
-                            version=self._graph_version(), q=cat_s.size)
+                            version=self._graph_version(), q=cat_s.size,
+                            t_assemble=t_a, stage_s=stage_s)
         if reason == "deadline":
             self._deadline_flushes += 1
         elif reason == "full":
@@ -287,16 +326,20 @@ class Frontend:
             self._forced_flushes += 1
 
     def _finish(self) -> int:
-        cut, handle, t_begin = self._inflight
+        cut, handle, t_begin, slab_tok = self._inflight
         self._inflight = None
         ans = self.session.finish(handle)
         # re-read the clock: finish() blocked, and latencies/misses must
         # include that device time, not the poll()-entry timestamp
         now = self.clock()
         dt = max(0.0, now - t_begin)
+        tr = get_tracer()
+        tr.end(slab_tok)
+        self._h_service.observe(dt)
         self._service_ewma = (dt if not self._ewma_primed
                               else 0.7 * self._service_ewma + 0.3 * dt)
         self._ewma_primed = True
+        misses = 0
         lo = 0
         for req in cut.reqs:
             k = req.pending.size
@@ -314,6 +357,17 @@ class Frontend:
             acc["lat"].add(now - req.t_submit)
             if now > req.deadline:
                 acc["deadline_misses"] += 1
+                misses += 1
+                tr.instant("deadline_miss", ticket=req.ticket,
+                           tenant=req.tenant,
+                           late_us=(now - req.deadline) * 1e6)
+        eng = self.session.engine
+        self.slowlog.observe_slab(
+            slab=self._n_batches, service_s=dt, n_queries=cut.q,
+            deadline_misses=misses,
+            breakdown={"stage": cut.stage_s,
+                       "phase1": eng.last_phase1_s,
+                       "phase2": eng.last_phase2_s})
         self._n_batches += 1
         self._batch_queries += cut.q
         self._batch_slots += cut.staged.bucket
@@ -357,6 +411,9 @@ class Frontend:
     # -------------------------------------------------------------- stats
     @property
     def stats(self) -> FrontendStats:
+        def us(v):               # empty latency window -> None, not 0-bias
+            return None if v is None else v * 1e6
+
         tenants = {}
         for name, acc in self._acc.items():
             tq = self.router.tenants.get(name)
@@ -368,9 +425,9 @@ class Frontend:
                 deadline_misses=acc["deadline_misses"],
                 cache_short_circuits=acc["short_circuits"],
                 queue_hiwater=0 if tq is None else tq.hiwater,
-                p50_us=lat.percentile(50) * 1e6,
-                p99_us=lat.percentile(99) * 1e6,
-                mean_us=lat.mean * 1e6)
+                p50_us=us(lat.percentile(50)),
+                p99_us=us(lat.percentile(99)),
+                mean_us=us(lat.mean))
         return FrontendStats(
             tenants=tenants,
             n_batches=self._n_batches,
@@ -381,3 +438,28 @@ class Frontend:
             full_flushes=self._full_flushes,
             forced_flushes=self._forced_flushes,
             cache=None if self.cache is None else self.cache.as_dict())
+
+    def _flat_stats(self) -> dict:
+        """Numeric-only view for the metrics registry (register_stats):
+        the nested TenantSnapshot/cache dicts are summed flat so every
+        sample is a plain ``reach_frontend_<field>`` number."""
+        out = {
+            "n_batches": self._n_batches,
+            "batch_queries": self._batch_queries,
+            "batch_slots": self._batch_slots,
+            "deadline_flushes": self._deadline_flushes,
+            "full_flushes": self._full_flushes,
+            "forced_flushes": self._forced_flushes,
+            "requests": sum(a["requests"] for a in self._acc.values()),
+            "completed": sum(a["completed"] for a in self._acc.values()),
+            "deadline_misses": sum(a["deadline_misses"]
+                                   for a in self._acc.values()),
+            "cache_short_circuits": sum(a["short_circuits"]
+                                        for a in self._acc.values()),
+        }
+        if self.cache is not None:
+            out["cache_hits"] = self.cache.hits
+            out["cache_misses"] = self.cache.misses
+            out["cache_evictions"] = self.cache.evictions
+            out["cache_invalidations"] = self.cache.invalidations
+        return out

@@ -18,9 +18,15 @@ class LatencyTrack:
 
     Keeps every sample up to ``cap``; past that, reservoir-samples
     (deterministic LCG — no global RNG state) so percentiles stay
-    unbiased while memory stays bounded under long-running serving."""
+    unbiased while memory stays bounded under long-running serving.
+    ``cap`` comes from ``IndexSpec.latency_window`` when the frontend
+    builds these. An EMPTY track reports ``None`` percentiles/mean —
+    never 0.0, which would drag aggregate latency reports toward zero
+    for tenants that have not completed a request yet."""
 
     def __init__(self, cap: int = 1 << 16):
+        if cap < 1:
+            raise ValueError(f"latency window cap must be >= 1, got {cap}")
         self.cap = cap
         self.count = 0
         self.total = 0.0
@@ -39,14 +45,28 @@ class LatencyTrack:
         if j < self.cap:
             self._samples[j] = seconds
 
-    def percentile(self, p: float) -> float:
+    def percentile(self, p: float) -> Optional[float]:
+        """p-th percentile of the retained window, or None when empty.
+
+        The reservoir keeps samples in *replacement* order, not arrival
+        order — a wrapped window is an unordered bag, so the percentile
+        sorts every call rather than assuming ring order."""
         if not self._samples:
-            return 0.0
+            return None
+        if not 0.0 <= p <= 100.0:
+            raise ValueError(f"percentile must be in [0, 100], got {p}")
         return float(np.percentile(np.asarray(self._samples), p))
 
     @property
-    def mean(self) -> float:
-        return 0.0 if self.count == 0 else self.total / self.count
+    def window(self) -> int:
+        """Samples currently retained (== count until the cap is hit)."""
+        return len(self._samples)
+
+    @property
+    def mean(self) -> Optional[float]:
+        """Exact mean over ALL samples ever added (not just the window);
+        None when no sample was added."""
+        return None if self.count == 0 else self.total / self.count
 
 
 @dataclass
@@ -59,9 +79,11 @@ class TenantSnapshot:
     deadline_misses: int = 0     # completed after their deadline
     cache_short_circuits: int = 0   # requests fully answered by the cache
     queue_hiwater: int = 0       # max pending queries ever enqueued
-    p50_us: float = 0.0          # submit→complete latency percentiles
-    p99_us: float = 0.0
-    mean_us: float = 0.0
+    # submit→complete latency percentiles; None until the tenant has
+    # completed at least one request (an empty window has no percentile)
+    p50_us: Optional[float] = None
+    p99_us: Optional[float] = None
+    mean_us: Optional[float] = None
 
     def as_dict(self) -> dict:
         return {"requests": self.requests, "queries": self.queries,

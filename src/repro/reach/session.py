@@ -31,6 +31,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core.query import ResettableStats
+from ..obs import register_stats, span
 from .spec import IndexSpec, make_engine
 
 
@@ -116,6 +117,9 @@ class QuerySession:
         self._replay_tail = None
         self._next_delta_seq = None   # per-epoch log cursor (lazy-listed)
         self.reset_stats()
+        # snapshot-time provider: the padded-query subtraction stays in
+        # the ``stats`` property, the registry just reads through it
+        register_stats("reach_session", self, provider=lambda s: s.stats)
 
     # ------------------------------------------------------------- loading
     @classmethod
@@ -251,7 +255,8 @@ class QuerySession:
             pt[:q] = dsts
         else:
             ps, pt = srcs, dsts
-        cs, ct = self.engine.stage_queries(ps, pt)
+        with span("stage", q=q, bucket=b):
+            cs, ct = self.engine.stage_queries(ps, pt)
         return _StagedBatch(q=q, bucket=b, srcs=cs, dsts=ct)
 
     def begin(self, staged: "_StagedBatch") -> "_InflightBatch":
@@ -259,7 +264,8 @@ class QuerySession:
         handle is bound to the CURRENT engine: ``compact()`` refuses to
         run while any handle is outstanding (see there)."""
         t0 = time.perf_counter()
-        handle = self.engine.start_answer(staged.srcs, staged.dsts)
+        with span("dispatch", bucket=staged.bucket):
+            handle = self.engine.start_answer(staged.srcs, staged.dsts)
         self._n_inflight += 1
         return _InflightBatch(staged=staged, handle=handle, t0=t0)
 
@@ -270,7 +276,8 @@ class QuerySession:
         ``query()`` ones; ``seconds`` covers begin→finish wall time."""
         st = inflight.staged
         try:
-            ans = self.engine.finish_answer(inflight.handle)[: st.q]
+            with span("finish", q=st.q, bucket=st.bucket):
+                ans = self.engine.finish_answer(inflight.handle)[: st.q]
         finally:
             self._n_inflight -= 1
         self._seconds += time.perf_counter() - inflight.t0

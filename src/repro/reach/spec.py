@@ -83,6 +83,7 @@ class IndexSpec:
     deadline_us: int = 500          # per-tenant coalescing deadline
     tenant_queue_cap: int = 8192    # pending queries per tenant queue
     cache_entries: int = 65536      # epoch-keyed answer cache; 0 disables
+    latency_window: int = 1 << 16   # per-tenant latency reservoir size
 
     # ------------------------------------------------------------ validate
     def __post_init__(self):
@@ -160,6 +161,9 @@ class IndexSpec:
             raise ValueError("tenant_queue_cap must be >= 1")
         if self.cache_entries < 0:
             raise ValueError("cache_entries must be >= 0 (0 disables)")
+        if self.latency_window < 1:
+            raise ValueError("latency_window must be >= 1 (the percentile "
+                             "reservoir needs at least one slot)")
         if self.placement not in PLACEMENTS:
             raise ValueError(f"placement must be one of {PLACEMENTS}, "
                              f"got {self.placement!r}")
@@ -299,6 +303,11 @@ class IndexSpec:
                         dest="cache_entries", metavar="ENTRIES",
                         help="epoch-keyed (epoch, u, v) answer-cache "
                              "capacity; 0 disables")
+        ap.add_argument("--latency-window", type=int,
+                        default=d.latency_window, dest="latency_window",
+                        help="per-tenant latency reservoir size backing "
+                             "the frontend's p50/p99 (bounded memory "
+                             "under long-running serving)")
 
     @classmethod
     def from_args(cls, args: argparse.Namespace) -> "IndexSpec":
@@ -332,6 +341,7 @@ class IndexSpec:
             deadline_us=args.deadline_us,
             tenant_queue_cap=args.tenant_queue_cap,
             cache_entries=args.cache_entries,
+            latency_window=args.latency_window,
         )
 
     def to_cli_args(self) -> list:
@@ -370,7 +380,8 @@ class IndexSpec:
             argv += ["--mesh", self.mesh]
         argv += ["--deadline-us", str(self.deadline_us),
                  "--tenant-queue-cap", str(self.tenant_queue_cap),
-                 "--cache", str(self.cache_entries)]
+                 "--cache", str(self.cache_entries),
+                 "--latency-window", str(self.latency_window)]
         return argv
 
 

@@ -12,6 +12,10 @@ from repro.configs.base import shapes_for_family
 from repro.configs.registry import ARCHS, ASSIGNED_ARCHS, get_config, get_smoke
 from repro.models.api import build_cell, materialize_state
 
+# LLM-architecture lane — excluded from the reachability tier-1
+# CI job, run by the arch-lane job instead (pytest.ini)
+pytestmark = pytest.mark.arch
+
 KEY = jax.random.PRNGKey(0)
 
 

@@ -73,6 +73,12 @@ from repro.launch.train import Trainer
 from repro.runtime.fault_tolerance import FaultInjector
 import math
 
+import pytest
+
+# LLM-architecture lane — excluded from the reachability tier-1
+# CI job, run by the arch-lane job instead (pytest.ini)
+pytestmark = pytest.mark.arch
+
 tr = Trainer("tinyllama-1.1b", smoke=True, ckpt_dir="{ckpt}",
              batch_override=4, seq_override=32,
              fault_injector=FaultInjector.worker_failure_at(7))

@@ -35,6 +35,12 @@ from repro.launch.train import Trainer
 from repro.runtime.elastic import ElasticMeshManager
 from repro.runtime.fault_tolerance import FaultInjector, HeartbeatMonitor
 
+import pytest
+
+# LLM-architecture lane — excluded from the reachability tier-1
+# CI job, run by the arch-lane job instead (pytest.ini)
+pytestmark = pytest.mark.arch
+
 mgr = ElasticMeshManager(prefer_model=2)
 tr = Trainer("tinyllama-1.1b", smoke=True, ckpt_dir="{ckpt}",
              mesh=mgr.current_mesh(), batch_override=4, seq_override=32,

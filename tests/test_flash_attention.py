@@ -12,6 +12,10 @@ import pytest
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ref import flash_attention_ref
 
+# LLM-architecture lane — excluded from the reachability tier-1
+# CI job, run by the arch-lane job instead (pytest.ini)
+pytestmark = pytest.mark.arch
+
 
 def _mk(b, sq, sk, h, hd, dtype, seed=0):
     rng = np.random.default_rng(seed)

@@ -8,6 +8,12 @@ import numpy as np
 from repro.configs.registry import get_smoke
 from repro.models import transformer as tf
 
+import pytest
+
+# LLM-architecture lane — excluded from the reachability tier-1
+# CI job, run by the arch-lane job instead (pytest.ini)
+pytestmark = pytest.mark.arch
+
 
 def _decode_run(cfg, params, toks, n_steps):
     B, S = toks.shape

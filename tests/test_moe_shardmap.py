@@ -33,6 +33,12 @@ from repro.configs.base import LMConfig, MoESpec
 from repro.models import transformer as tf
 from repro.parallel.sharding import ShardingCtx
 
+import pytest
+
+# LLM-architecture lane — excluded from the reachability tier-1
+# CI job, run by the arch-lane job instead (pytest.ini)
+pytestmark = pytest.mark.arch
+
 cfg = LMConfig(arch_id="t", n_layers=1, d_model=16, n_heads=2, n_kv_heads=2,
                d_ff=32, vocab=64, dtype="float32", remat=False,
                moe=MoESpec(n_experts=8, top_k=2, capacity_factor=8.0,

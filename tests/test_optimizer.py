@@ -7,8 +7,14 @@ try:
 except ImportError:  # bare env: deterministic local shim (tests/_hyp.py)
     from _hyp import given, settings, st
 
+import pytest
+
 from repro.optim.optimizer import (OptConfig, adamw_init, adamw_update,
                                    clip_by_global_norm, schedule_lr)
+
+# LLM-architecture lane — excluded from the reachability tier-1
+# CI job, run by the arch-lane job instead (pytest.ini)
+pytestmark = pytest.mark.arch
 
 
 def test_adamw_first_step_matches_manual():
